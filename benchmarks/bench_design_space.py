@@ -1,0 +1,63 @@
+"""Fig 9/10 reproduction: iso-throughput (~4 TOPS nominal) design space.
+
+Enumerates A x B x C _ M x N arrays with {dense, fixed-DBB, VDBB} x
+{IM2COL on/off}, computes normalized power & area vs the 1x1x1_32x64
+TPU-like baseline, and checks the paper's three groupings:
+  (1) dense STA configs   — top right (no sparsity benefit)
+  (2) fixed-DBB designs   — >2x area reduction vs baseline
+  (3) VDBB + IM2C designs — pareto-front bottom-left (>2.5x area, >2x power)
+"""
+import time
+
+from repro.core.energy_model import STAConfig, fmt_for_sparsity
+
+MODEL_FMT = fmt_for_sparsity(0.625)  # 3/8 DBB as in Fig 9
+ACT_SP = 0.5
+
+
+def candidates():
+    out = []
+    # baseline systolic array
+    out.append(("1x1x1_32x64", STAConfig(1, 1, 1, 32, 64, mode="dense", im2col=False)))
+    out.append(("1x1x1_32x64_IM2C", STAConfig(1, 1, 1, 32, 64, mode="dense", im2col=True)))
+    # dense STA variants (iso ~2048 MACs)
+    out.append(("2x8x2_8x8", STAConfig(2, 8, 2, 8, 8, mode="dense", im2col=False)))
+    out.append(("4x8x4_4x4", STAConfig(4, 8, 4, 4, 4, mode="dense", im2col=False)))
+    # fixed 4/8 DBB (2048 executed MACs)
+    out.append(("4x8x4dbb_4x8_IM2C", STAConfig(4, 8, 4, 4, 8, mode="dbb", hw_nnz=4, im2col=True)))
+    out.append(("2x8x4dbb_8x8", STAConfig(2, 8, 4, 8, 8, mode="dbb", hw_nnz=4, im2col=False)))
+    # VDBB (2048 MAC-equivalents)
+    out.append(("4x8x8_4x8_VDBB_IM2C", STAConfig(4, 8, 8, 4, 8, mode="vdbb", im2col=True)))
+    out.append(("4x8x4_8x8_VDBB_IM2C", STAConfig(4, 8, 4, 8, 8, mode="vdbb", im2col=True)))
+    out.append(("4x8x8_4x8_VDBB", STAConfig(4, 8, 8, 4, 8, mode="vdbb", im2col=False)))
+    return out
+
+
+def run(report):
+    t0 = time.time()
+    base = STAConfig(1, 1, 1, 32, 64, mode="dense", im2col=False)
+    base_p = base.power_mw(MODEL_FMT, ACT_SP)
+    base_a = base.area_mm2()
+    rows = {}
+    for name, d in candidates():
+        # effective power/area per effective op (Fig 10 axes)
+        s = d.speedup(MODEL_FMT)
+        rows[name] = (
+            d.power_mw(MODEL_FMT, ACT_SP) / base_p / s,
+            d.area_mm2() / base_a / s,
+            d.peak_tops(),
+        )
+    # groupings
+    best = rows["4x8x8_4x8_VDBB_IM2C"]
+    assert best[1] < 1 / 2.5, f"pareto VDBB area not >2.5x better: {best}"
+    assert best[0] < 1 / 2.0, f"pareto VDBB power not >2x better: {best}"
+    dbb = rows["4x8x4dbb_4x8_IM2C"]
+    assert dbb[1] < 0.5, f"fixed DBB area not >2x better: {dbb}"
+    for name in ("2x8x2_8x8", "4x8x4_4x4"):
+        assert rows[name][0] > best[0] and rows[name][1] > best[1], (
+            "dense STA should be dominated by VDBB designs"
+        )
+    us = (time.time() - t0) * 1e6
+    for name, (p, a, tops) in sorted(rows.items(), key=lambda kv: kv[1][0]):
+        report(f"design_space/{name}", us / len(rows),
+               f"rel_power {p:.3f} rel_area {a:.3f} peak {tops:.1f} TOPS")

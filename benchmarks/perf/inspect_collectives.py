@@ -1,0 +1,47 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re, dataclasses, collections
+import jax
+from repro.configs import get_config
+from repro.launch import dryrun as dr
+from repro.launch.mesh import make_production_mesh
+from repro.sharding.rules import make_rules
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "qwen2-72b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+groups = int(sys.argv[3]) if len(sys.argv) > 3 else 1
+sparsity = float(sys.argv[4]) if len(sys.argv) > 4 else 0.625
+
+cfg = get_config(arch, sparsity=sparsity)
+cfg = dataclasses.replace(cfg, num_layers=groups * len(cfg.pattern), scan_layers=False)
+mesh = make_production_mesh()
+mode = {"train":"train","prefill":"prefill","decode":"decode"}[dr.SHAPES[shape]["kind"]]
+rules = make_rules(cfg, tp=16, mode=mode)
+compiled = dr._lower(cfg, shape, mesh, rules)
+txt = compiled.as_text()
+rows = []
+for line in txt.splitlines():
+    s = line.strip()
+    m = re.match(r"%?[\w.\-]+ = (.*?) (\w[\w\-]*)\(", s)
+    if not m: continue
+    op = m.group(2)
+    for c in dr.COLLECTIVES:
+        if op == c or op.startswith(c + "-"):
+            b = dr._shape_bytes(m.group(1))
+            beq = dr._shape_bytes(m.group(1), tpu_equiv=True)
+            meta = re.search(r'op_name="([^"]+)"', s)
+            rows.append((b, op, ((meta.group(1) if meta else "?") + " ||| " + m.group(1)[:120])[:260], beq))
+            break
+rows.sort(key=lambda r: r[0], reverse=True)
+total = sum(r[0] for r in rows)
+teq = sum(r[3] for r in rows)
+print(f"TOTAL collective bytes/device: {total/1e9:.1f} GB raw | {teq/1e9:.1f} GB tpu-equiv | {len(rows)} ops")
+agg = collections.Counter()
+for b, op, name, _ in rows:
+    key = re.sub(r"\d+", "#", name.split("/")[-1])[:60] + " :: " + op
+    agg[key] += b
+for k, v in agg.most_common(18):
+    print(f"  {v/1e9:8.2f} GB  {k}")
+print("--- top 12 individual ops ---")
+for b, op, name, _ in rows[:12]:
+    print(f"  {b/1e9:8.2f} GB  {op:20s} {name}")

@@ -1,0 +1,146 @@
+"""Roofline report: derive compute / memory / collective terms per
+(arch x shape) cell from the dry-run cache and emit the EXPERIMENTS.md
+§Roofline table.
+
+Terms (TPU v5e):
+  compute    = per-device HLO FLOPs / 197 TFLOP/s (bf16)
+  memory     = per-device HLO bytes / 819 GB/s HBM
+  collective = per-device collective bytes / 50 GB/s ICI
+
+Per-device FLOPs/bytes come from the unrolled micro-compile extrapolation
+(see launch/dryrun.py: XLA cost analysis counts scan bodies once, so the
+full-program numbers are floors, not step costs).
+
+MODEL_FLOPS uses the standard 6*N*D (train) / 2*N*B (decode) with N =
+active non-embedding params (MoE: shared + top_k/E of routed), D = tokens
+per step. The ratio MODEL_FLOPS / HLO_FLOPS shows how much compiled
+compute is 'useful' (catches remat and resharding waste); with VDBB
+serving, HLO FLOPs *should* drop below dense MODEL_FLOPS by ~nnz/bz.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.core.energy_model import TPU_V5E
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+DRYRUN = RESULTS / "dryrun"
+
+
+def model_flops(arch: str, shape: dict, kind: str, sparsity) -> dict:
+    from repro.configs import get_config
+    from repro.models.model import LM
+
+    cfg = get_config(arch, sparsity=sparsity)
+    n_total = cfg.param_count()
+    n_active = cfg.active_param_count()
+    # exclude embedding table rows from the '6ND' core count
+    n_embed = cfg.padded_vocab * cfg.d_model
+    if not cfg.tie_embeddings:
+        n_embed *= 2
+    if cfg.frontend == "audio":
+        n_embed = (
+            cfg.num_codebooks * cfg.codebook_vocab * cfg.d_model * 2
+        )
+    n_core = max(n_active - n_embed, 1)
+    b, s = shape["global_batch"], shape["seq_len"]
+    if kind == "train":
+        mf = 6 * n_core * b * s + 2 * b * s * cfg.padded_vocab * cfg.d_model
+    elif kind == "prefill":
+        mf = 2 * n_core * b * s
+    else:  # decode: one token/step, attention reads the cache
+        mf = 2 * n_core * b
+    return dict(n_total=n_total, n_active=n_active, n_core=n_core, model_flops=mf)
+
+
+def load_cells(multi_pod=False):
+    pod = "pod2" if multi_pod else "pod1"
+    out = []
+    for p in sorted(DRYRUN.glob(f"*__{pod}__*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def roofline_row(rec: dict) -> dict:
+    from repro.configs import SHAPES
+
+    if rec["status"] != "ok":
+        return dict(rec, terms=None)
+    chips = rec["chips"]
+    micro = rec.get("micro") or {}
+    flops_pd = micro.get("per_device_flops") or rec["cost"]["flops"]
+    bytes_pd = micro.get("per_device_bytes") or rec["cost"]["bytes_accessed"]
+    coll_pd = micro.get("per_device_collective_bytes_tpu_equiv")
+    if coll_pd is None:
+        coll_pd = micro.get("per_device_collective_bytes")
+    if coll_pd is None:
+        coll_pd = rec["collectives"].get(
+            "tpu_equiv_total_bytes", rec["collectives"]["total_bytes"]
+        )
+    t_c = flops_pd / TPU_V5E["peak_bf16_flops"]
+    t_m = bytes_pd / TPU_V5E["hbm_bw"]
+    t_x = coll_pd / TPU_V5E["ici_bw"]
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    sh = SHAPES[rec["shape"]]
+    mf = model_flops(rec["arch"], sh, rec["kind"], rec["sparsity"])
+    hlo_global = flops_pd * chips
+    return dict(
+        rec,
+        terms=dict(
+            compute_s=t_c,
+            memory_s=t_m,
+            collective_s=t_x,
+            dominant=dom,
+            step_time_bound_s=max(t_c, t_m, t_x),
+            roofline_fraction=t_c / max(t_c, t_m, t_x),
+            model_flops=mf["model_flops"],
+            hlo_flops_global=hlo_global,
+            useful_ratio=mf["model_flops"] / max(hlo_global, 1),
+            n_active=mf["n_active"],
+        ),
+    )
+
+
+def table(multi_pod=False):
+    return [roofline_row(r) for r in load_cells(multi_pod)]
+
+
+def render_md(rows) -> str:
+    hdr = (
+        "| arch | shape | sp | attn | compute s | memory s | collective s | "
+        "dominant | roofline frac | MODEL/HLO flops |\n|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = [hdr]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['sparsity']} | — | — | — | — | "
+                f"SKIP | — | — |\n"
+            )
+            continue
+        if r["status"] != "ok" or not r.get("terms"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['sparsity']} | — | ERROR | | | | | |\n")
+            continue
+        t = r["terms"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['sparsity']} | {r.get('attn_mode','')} "
+            f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} | {t['collective_s']:.3e} "
+            f"| **{t['dominant']}** | {t['roofline_fraction']:.2f} | {t['useful_ratio']:.2f} |\n"
+        )
+    return "".join(lines)
+
+
+def run(report):
+    rows = table(multi_pod=False)
+    ok = [r for r in rows if r["status"] == "ok" and r.get("terms")]
+    skip = [r for r in rows if r["status"] == "skipped"]
+    (RESULTS / "roofline.md").write_text(render_md(rows))
+    for r in ok:
+        t = r["terms"]
+        report(
+            f"roofline/{r['arch']}/{r['shape']}",
+            t["step_time_bound_s"] * 1e6,
+            f"dom={t['dominant']} frac={t['roofline_fraction']:.2f} useful={t['useful_ratio']:.2f}",
+        )
+    report("roofline/summary", 0.0, f"{len(ok)} cells, {len(skip)} documented skips -> results/roofline.md")

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``python -m benchmarks.run``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def report(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+BENCHES = [
+    ("table_v (Table V headline TOPS/W)", "benchmarks.bench_table_v"),
+    ("design_space (Fig 9/10)", "benchmarks.bench_design_space"),
+    ("sparsity_scaling (Fig 12)", "benchmarks.bench_sparsity_scaling"),
+    ("dbb_pruning (Table I/II)", "benchmarks.bench_dbb_pruning"),
+    ("im2col (IM2COL unit, Fig 8)", "benchmarks.bench_im2col"),
+    ("kernels (VDBB matmul)", "benchmarks.bench_kernels"),
+    ("roofline (EXPERIMENTS §Roofline)", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = []
+    import importlib
+
+    for label, mod in BENCHES:
+        if args.only and args.only not in mod:
+            continue
+        try:
+            importlib.import_module(mod).run(report)
+        except Exception as e:  # noqa: BLE001
+            failures.append((label, e))
+            traceback.print_exc()
+            report(f"{mod}/FAILED", 0.0, f"{type(e).__name__}: {e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.checkpoint import store  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.configs.registry import ARCHS, get_config, smoke_config  # noqa: F401
+from repro.configs.shapes import SHAPES, cell_runnable, input_specs, make_batch  # noqa: F401

@@ -1,0 +1,7 @@
+"""Config for --arch codeqwen1.5-7b (exact assigned shape set)."""
+from repro.configs.registry import codeqwen1_5_7b as config  # noqa: F401
+from repro.configs.registry import smoke_config as _smoke
+
+
+def smoke(sparsity=0.625):
+    return _smoke('codeqwen1.5-7b', sparsity=sparsity)

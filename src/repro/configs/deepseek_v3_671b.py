@@ -1,0 +1,7 @@
+"""Config for --arch deepseek-v3-671b (exact assigned shape set)."""
+from repro.configs.registry import deepseek_v3_671b as config  # noqa: F401
+from repro.configs.registry import smoke_config as _smoke
+
+
+def smoke(sparsity=0.625):
+    return _smoke('deepseek-v3-671b', sparsity=sparsity)

@@ -1,0 +1,7 @@
+"""Config for --arch moonshot-v1-16b-a3b (exact assigned shape set)."""
+from repro.configs.registry import moonshot_v1_16b as config  # noqa: F401
+from repro.configs.registry import smoke_config as _smoke
+
+
+def smoke(sparsity=0.625):
+    return _smoke('moonshot-v1-16b-a3b', sparsity=sparsity)

@@ -1,0 +1,7 @@
+"""Config for --arch musicgen-medium (exact assigned shape set)."""
+from repro.configs.registry import musicgen_medium as config  # noqa: F401
+from repro.configs.registry import smoke_config as _smoke
+
+
+def smoke(sparsity=0.625):
+    return _smoke('musicgen-medium', sparsity=sparsity)

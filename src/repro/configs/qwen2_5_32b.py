@@ -1,0 +1,7 @@
+"""Config for --arch qwen2.5-32b (exact assigned shape set)."""
+from repro.configs.registry import qwen2_5_32b as config  # noqa: F401
+from repro.configs.registry import smoke_config as _smoke
+
+
+def smoke(sparsity=0.625):
+    return _smoke('qwen2.5-32b', sparsity=sparsity)

@@ -1,0 +1,7 @@
+"""Config for --arch recurrentgemma-2b (exact assigned shape set)."""
+from repro.configs.registry import recurrentgemma_2b as config  # noqa: F401
+from repro.configs.registry import smoke_config as _smoke
+
+
+def smoke(sparsity=0.625):
+    return _smoke('recurrentgemma-2b', sparsity=sparsity)

@@ -1,0 +1,7 @@
+"""Config for --arch rwkv6-3b (exact assigned shape set)."""
+from repro.configs.registry import rwkv6_3b as config  # noqa: F401
+from repro.configs.registry import smoke_config as _smoke
+
+
+def smoke(sparsity=0.625):
+    return _smoke('rwkv6-3b', sparsity=sparsity)

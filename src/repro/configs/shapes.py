@@ -1,0 +1,83 @@
+"""Assigned input-shape sets and input_specs() builders.
+
+Every LM arch is paired with four shapes; decode_*/long_* lower serve_step
+(one new token + KV cache of seq_len), train_4k lowers train_step and
+prefill_32k lowers the prefill forward. Modality frontends are stubs:
+input_specs provides precomputed patch/frame embeddings per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+def cell_runnable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runnable, reason). long_500k only for bounded-state archs."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: 524k-token dense KV cache is the quadratic-regime artifact this shape excludes (DESIGN.md §5)"
+    return True, ""
+
+
+def _tok_spec(cfg: ModelConfig, b: int, s: int):
+    if cfg.frontend == "audio":
+        return jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), jnp.int32)
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    if kind in ("train", "prefill"):
+        batch = {"tokens": _tok_spec(cfg, b, s)}
+        if kind == "train":
+            if cfg.frontend == "audio":
+                batch["labels"] = jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), jnp.int32)
+            else:
+                batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            batch["loss_mask"] = jax.ShapeDtypeStruct((b, s), jnp.float32)
+        if cfg.frontend == "vision":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_vision_tokens, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.cross_attn:
+            batch["memory"] = jax.ShapeDtypeStruct((b, cfg.cross_len, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token, cache of seq_len
+    batch = {"tokens": _tok_spec(cfg, b, 1)}
+    if cfg.cross_attn:
+        batch["memory"] = jax.ShapeDtypeStruct((b, cfg.cross_len, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def make_batch(cfg: ModelConfig, *, batch: int, seq: int, key=None, kind="train") -> dict:
+    """Concrete random batch (smoke tests / examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    vocab = cfg.codebook_vocab if cfg.frontend == "audio" else cfg.vocab_size
+    tshape = (batch, seq, cfg.num_codebooks) if cfg.frontend == "audio" else (batch, seq)
+    out = {"tokens": jax.random.randint(ks[0], tshape, 0, vocab, jnp.int32)}
+    if kind == "train":
+        out["labels"] = jax.random.randint(ks[1], tshape, 0, vocab, jnp.int32)
+        out["loss_mask"] = jnp.ones((batch, seq), jnp.float32)
+    if cfg.frontend == "vision" and seq > cfg.num_vision_tokens:
+        out["vision_embeds"] = 0.02 * jax.random.normal(
+            ks[2], (batch, cfg.num_vision_tokens, cfg.d_model), jnp.float32
+        ).astype(jnp.bfloat16)
+    if cfg.cross_attn:
+        out["memory"] = 0.02 * jax.random.normal(
+            ks[3], (batch, cfg.cross_len, cfg.d_model), jnp.float32
+        ).astype(jnp.bfloat16)
+    return out

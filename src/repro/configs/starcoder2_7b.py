@@ -1,0 +1,7 @@
+"""Config for --arch starcoder2-7b (exact assigned shape set)."""
+from repro.configs.registry import starcoder2_7b as config  # noqa: F401
+from repro.configs.registry import smoke_config as _smoke
+
+
+def smoke(sparsity=0.625):
+    return _smoke('starcoder2-7b', sparsity=sparsity)

@@ -1,0 +1,23 @@
+"""Core of the reproduction: VDBB sparsity + accelerator analytic models."""
+from repro.core.vdbb import (  # noqa: F401
+    DBBFormat,
+    DBBWeight,
+    DENSE,
+    dbb_decode,
+    dbb_encode,
+    dbb_gemm_costs,
+    dbb_mask,
+    dbb_matmul_gather_ref,
+    dbb_matmul_ref,
+    dbb_prune,
+    satisfies_dbb,
+)
+from repro.core.sparse_linear import DBBLinear, PruneSchedule  # noqa: F401
+from repro.core.energy_model import (  # noqa: F401
+    PARETO_DESIGN,
+    PAPER_TABLE_V_16NM,
+    PAPER_TABLE_V_65NM,
+    STAConfig,
+    TPU_V5E,
+    fmt_for_sparsity,
+)

@@ -1,0 +1,76 @@
+"""Training-time DBB pruning utilities operating on whole param pytrees.
+
+The paper's recipe (§V-A): start from a dense (pre)trained model, apply
+magnitude-based DBB-aware pruning progressively (~20 epochs), then fine
+tune with the mask fixed. Here that is expressed as a projection applied
+inside `train_step` after the optimizer update, driven by a PruneSchedule.
+
+The model zoo tags each DBB-constrained weight leaf by constructing it via
+DBBLinear; `tree_constrain` walks a parallel tree of (module, sub-params).
+To keep things simple and pjit-friendly, models expose
+`constrain_fn(params, step) -> params` built from their module tree.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_linear import DBBLinear, PruneSchedule
+from repro.core.vdbb import DBBFormat, dbb_mask, dbb_prune, satisfies_dbb
+
+
+def global_dbb_stats(params, fmts: dict) -> dict:
+    """Fraction of weights zero / constraint satisfaction per tagged leaf.
+
+    fmts: {path_str: (DBBFormat, leaf_array)} — produced by the model's
+    `dbb_leaves(params)` helper.
+    """
+    out = {}
+    for path, (fmt, w) in fmts.items():
+        nz = jnp.mean((w != 0).astype(jnp.float32))
+        out[path] = dict(
+            density=float(nz),
+            target_density=fmt.density,
+            satisfied=bool(satisfies_dbb(w, fmt)),
+        )
+    return out
+
+
+def make_constrain_fn(
+    modules_with_paths,
+    schedule: Optional[PruneSchedule] = None,
+) -> Callable:
+    """Build f(params, step)->params projecting every DBBLinear weight.
+
+    modules_with_paths: list of (getter, setter, DBBLinear) where getter
+    extracts the module's sub-params dict from the full tree and setter
+    writes it back (functional).
+    """
+
+    def constrain(params, step):
+        for getter, setter, mod in modules_with_paths:
+            sub = getter(params)
+            sub = mod.constrain(sub, step, schedule)
+            params = setter(params, sub)
+        return params
+
+    return constrain
+
+
+def prune_tree_to_dbb(params, fmt: DBBFormat, min_k: Optional[int] = None):
+    """Blanket-prune every rank-2 leaf whose K dim is blockable (utility for
+    experiments/ablations; production models use per-layer formats)."""
+
+    def prune_leaf(w):
+        if (
+            isinstance(w, jax.Array)
+            and w.ndim == 2
+            and w.shape[0] % fmt.bz == 0
+            and (min_k is None or w.shape[0] >= min_k)
+        ):
+            return dbb_prune(w, fmt)
+        return w
+
+    return jax.tree_util.tree_map(prune_leaf, params)

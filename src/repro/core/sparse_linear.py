@@ -1,0 +1,130 @@
+"""DBBLinear — the paper's technique as a first-class model layer.
+
+Training: weights are dense arrays kept *projected* onto the DBB constraint
+(magnitude top-nnz per block) by `constrain()` — applied after optimizer
+updates, mirroring the paper's magnitude-based DBB-aware pruning (§V-A).
+A progressive schedule anneals nnz from bz down to the target.
+
+Serving: `compress_params()` converts the dense weight to the compressed
+DBBWeight layout; the forward pass then runs the compressed matmul
+(Pallas kernel on TPU, jnp reference elsewhere), consuming nnz/bz of the
+dense weight bandwidth — the VDBB win.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vdbb import (
+    DBBFormat,
+    DBBWeight,
+    DENSE,
+    dbb_decode,
+    dbb_encode,
+    dbb_matmul_gather_ref,
+    dbb_prune,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneSchedule:
+    """Linear anneal of nnz from bz to target between begin and end steps."""
+
+    begin_step: int = 0
+    end_step: int = 1
+    constrain_every: int = 1  # re-project every k steps (1 = every step)
+
+    def nnz_at(self, step: int, fmt: DBBFormat) -> jax.Array:
+        """Traced-safe current density bound (int32 scalar)."""
+        frac = jnp.clip(
+            (step - self.begin_step) / max(self.end_step - self.begin_step, 1), 0.0, 1.0
+        )
+        cur = jnp.round(fmt.bz - frac * (fmt.bz - fmt.nnz)).astype(jnp.int32)
+        return cur
+
+
+@dataclasses.dataclass(frozen=True)
+class DBBLinear:
+    """y = x @ W (+ b); W is (in_features, out_features), DBB along K=in."""
+
+    in_features: int
+    out_features: int
+    fmt: DBBFormat = DENSE
+    use_bias: bool = False
+    dtype: Any = jnp.float32
+    kernel_mode: str = "ref"  # 'ref' | 'pallas' (serving path choice)
+
+    def init(self, key) -> dict:
+        scale = 1.0 / (self.in_features**0.5)
+        w = scale * jax.random.truncated_normal(
+            key, -2, 2, (self.in_features, self.out_features), self.dtype
+        )
+        if not self.fmt.is_dense:
+            w = dbb_prune(w, self.fmt)
+        p = {"w": w}
+        if self.use_bias:
+            p["b"] = jnp.zeros((self.out_features,), self.dtype)
+        return p
+
+    # ------------------------------------------------------------------
+    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
+        w = params["w"]
+        if isinstance(w, DBBWeight):
+            y = self._compressed_matmul(x, w)
+        else:
+            y = jnp.matmul(x, w.astype(x.dtype))
+        if self.use_bias:
+            y = y + params["b"].astype(y.dtype)
+        return y
+
+    def _compressed_matmul(self, x: jax.Array, w: DBBWeight) -> jax.Array:
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        if self.kernel_mode == "pallas":
+            from repro.kernels import ops  # deferred: kernels are optional
+
+            y2 = ops.vdbb_matmul(x2, w)
+        elif w.fmt.group_size(w.shape[1]) == w.shape[1]:
+            y2 = dbb_matmul_gather_ref(x2, w)
+        else:
+            y2 = jnp.matmul(x2, dbb_decode(w).astype(x.dtype))
+        return y2.reshape(*lead, self.out_features)
+
+    # ------------------------------------------------------------------
+    def constrain(self, params: dict, step=None, schedule: Optional[PruneSchedule] = None) -> dict:
+        """Project the dense weight onto the (possibly annealed) constraint."""
+        if self.fmt.is_dense or isinstance(params["w"], DBBWeight):
+            return params
+        if schedule is None or step is None:
+            w = dbb_prune(params["w"], self.fmt)
+        else:
+            # anneal: switch between per-nnz masks with a traced nnz.
+            cur = schedule.nnz_at(step, self.fmt)
+            branches = [
+                lambda w, n=n: dbb_prune(
+                    w, dataclasses.replace(self.fmt, nnz=n)
+                )
+                for n in range(self.fmt.nnz, self.fmt.bz + 1)
+            ]
+            w = jax.lax.switch(cur - self.fmt.nnz, branches, params["w"])
+        return dict(params, w=w)
+
+    def compress_params(self, params: dict) -> dict:
+        if self.fmt.is_dense:
+            return params
+        return dict(params, w=dbb_encode(params["w"], self.fmt, prune=True))
+
+    def param_specs(self, k_axis: str, n_axis: str) -> dict:
+        """Logical sharding axes for dense or compressed layouts."""
+        spec = {"w": (k_axis, n_axis)}
+        if self.use_bias:
+            spec["b"] = (n_axis,)
+        return spec
+
+    def flops(self, batch: int) -> int:
+        """Executed MACs*2 under the time-unrolled occupancy model."""
+        k_eff = (self.in_features // self.fmt.bz) * self.fmt.nnz
+        return 2 * batch * k_eff * self.out_features

@@ -1,0 +1,291 @@
+"""Variable Density-Bound Block (VDBB) sparsity — functional core.
+
+Faithful functional model of the paper's VDBB scheme (Liu, Whatmough,
+Mattina 2020): weight matrices are blocked along the reduction dimension K
+in blocks of ``bz`` (paper uses 8); each block of each output column holds
+at most ``nnz`` non-zero values. Blocks are stored compressed as the nnz
+values plus positional indices (the hardware stores a BZ-bit bitmask; we
+store int8 positions, which carries identical information).
+
+Two pattern-sharing modes (see DESIGN.md §2):
+
+* ``group=None`` — paper-faithful: each output column has an independent
+  pattern per block (the ASIC muxes activations per MAC lane). On TPU this
+  yields an HBM-bandwidth win (compressed weight storage) but dense compute.
+* ``group=g``   — TPU co-design: all columns within a group of ``g`` share
+  one pattern per K-block, so activations can be gathered once per group
+  and the matmul runs over the *compressed* K dimension: FLOPs and bytes
+  both scale with nnz/bz on the MXU. ``group='matrix'`` shares across all N.
+
+All functions are pure and jit-safe; shapes are static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_BZ = 8
+
+
+# ---------------------------------------------------------------------------
+# Format descriptor
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DBBFormat:
+    """Static description of a density-bound-block format.
+
+    Attributes:
+      bz:    block size along the reduction (K) dimension.
+      nnz:   density bound — max non-zeros per block (1..bz). nnz == bz is
+             dense (the VDBB hardware supports it natively; so do we).
+      group: pattern-sharing group along N. None = per-column (paper);
+             int g = shared across g columns; 'matrix' = shared across N.
+    """
+
+    bz: int = DEFAULT_BZ
+    nnz: int = DEFAULT_BZ
+    group: Optional[Union[int, str]] = None
+
+    def __post_init__(self):
+        if not (1 <= self.nnz <= self.bz):
+            raise ValueError(f"nnz must be in [1, bz]; got {self.nnz}/{self.bz}")
+
+    @property
+    def density(self) -> float:
+        return self.nnz / self.bz
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.density
+
+    @property
+    def is_dense(self) -> bool:
+        return self.nnz == self.bz
+
+    def group_size(self, n: int) -> int:
+        if self.group is None:
+            return 1
+        if self.group == "matrix":
+            return n
+        return int(self.group)
+
+    def compression_ratio(self, bits: int = 8) -> float:
+        """Paper §II-A: compressed size = bits*NNZ + BZ per block."""
+        return (bits * self.bz) / (bits * self.nnz + self.bz)
+
+
+DENSE = DBBFormat()
+
+
+# ---------------------------------------------------------------------------
+# Pruning masks
+# ---------------------------------------------------------------------------
+
+
+def _check_blockable(k: int, fmt: DBBFormat):
+    if k % fmt.bz != 0:
+        raise ValueError(f"K={k} not divisible by block size bz={fmt.bz}")
+
+
+def dbb_mask(w: jax.Array, fmt: DBBFormat) -> jax.Array:
+    """Boolean mask keeping the top-|w| ``nnz`` entries of every DBB block.
+
+    ``w`` has shape (K, N); blocks run along K. With pattern sharing, the
+    block score is the sum of |w| across the group (magnitude pruning at
+    group granularity), mirroring the paper's magnitude-based DBB pruning
+    (§V-A) under the co-designed constraint.
+    """
+    k, n = w.shape
+    _check_blockable(k, fmt)
+    if fmt.is_dense:
+        return jnp.ones_like(w, dtype=bool)
+    nb = k // fmt.bz
+    g = fmt.group_size(n)
+    if n % g != 0:
+        raise ValueError(f"N={n} not divisible by group={g}")
+    # (nb, bz, ng) scores; top-nnz positions per (block, group) via top_k so
+    # tie-breaking is identical to dbb_encode.
+    scores = jnp.abs(w).reshape(nb, fmt.bz, n // g, g).sum(axis=-1)
+    _, idx = jax.lax.top_k(scores.transpose(0, 2, 1), fmt.nnz)  # (nb, ng, nnz)
+    keep = (
+        jax.nn.one_hot(idx, fmt.bz, dtype=jnp.int32).sum(axis=2) > 0
+    )  # (nb, ng, bz)
+    keep = keep.transpose(0, 2, 1)  # (nb, bz, ng)
+    keep = jnp.repeat(keep[:, :, :, None], g, axis=3).reshape(nb, fmt.bz, n)
+    return keep.reshape(k, n)
+
+
+def dbb_prune(w: jax.Array, fmt: DBBFormat) -> jax.Array:
+    """Magnitude-prune ``w`` to satisfy the DBB constraint (zero the rest)."""
+    return jnp.where(dbb_mask(w, fmt), w, jnp.zeros_like(w))
+
+
+def satisfies_dbb(w: jax.Array, fmt: DBBFormat) -> jax.Array:
+    """True iff every block of every column has <= nnz non-zeros."""
+    k, n = w.shape
+    _check_blockable(k, fmt)
+    nz = (w.reshape(k // fmt.bz, fmt.bz, n) != 0).sum(axis=1)
+    return jnp.all(nz <= fmt.nnz)
+
+
+# ---------------------------------------------------------------------------
+# Compressed representation
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DBBWeight:
+    """Compressed DBB weight.
+
+    values:  (nb, nnz, N)  — non-zero values, zero-padded if a block has
+             fewer than nnz non-zeros (paper §II-A: "blocks that have less
+             than NNZ non-zero elements will include one or more zeros").
+    indices: (nb, nnz, NG) int8 — intra-block positions in [0, bz).
+             NG = N / group_size (1 column group per entry).
+    fmt:     static DBBFormat.
+    shape:   static dense shape (K, N).
+    """
+
+    values: jax.Array
+    indices: jax.Array
+    fmt: DBBFormat
+    shape: tuple
+
+    def tree_flatten(self):
+        return (self.values, self.indices), (self.fmt, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def nbytes_compressed(self) -> int:
+        """Stored bytes: values + bitmask (bz bits per block-group)."""
+        vb = int(np.prod(self.values.shape)) * self.values.dtype.itemsize
+        nb, _, ng = self.indices.shape
+        mask_bits = nb * ng * self.fmt.bz
+        return vb + mask_bits // 8
+
+    def nbytes_dense(self) -> int:
+        return int(np.prod(self.shape)) * self.values.dtype.itemsize
+
+
+def dbb_encode(w: jax.Array, fmt: DBBFormat, *, prune: bool = False) -> DBBWeight:
+    """Compress a DBB-constrained dense (K, N) matrix.
+
+    If ``prune`` is True the matrix is magnitude-pruned to the constraint
+    first; otherwise it must already satisfy it (checked under jit via
+    where-zeroing: values outside the top-nnz pattern are dropped).
+    """
+    k, n = w.shape
+    _check_blockable(k, fmt)
+    if prune:
+        w = dbb_prune(w, fmt)
+    nb = k // fmt.bz
+    g = fmt.group_size(n)
+    ng = n // g
+    wb = w.reshape(nb, fmt.bz, ng, g)
+    scores = jnp.abs(wb).sum(axis=-1)  # (nb, bz, ng)
+    # top-nnz positions, sorted ascending by position (stable streaming order
+    # — the time-unrolled hardware consumes non-zeros in positional order).
+    _, idx = jax.lax.top_k(scores.transpose(0, 2, 1), fmt.nnz)  # (nb, ng, nnz)
+    idx = jnp.sort(idx, axis=-1)
+    idx = idx.transpose(0, 2, 1)  # (nb, nnz, ng)
+    # gather values: (nb, nnz, ng, g)
+    vals = jnp.take_along_axis(wb, idx[:, :, :, None], axis=1)
+    vals = vals.reshape(nb, fmt.nnz, n)
+    return DBBWeight(vals, idx.astype(jnp.int8), fmt, (k, n))
+
+
+def dbb_decode(dw: DBBWeight) -> jax.Array:
+    """Expand a compressed DBB weight back to dense (K, N).
+
+    Uses the one-hot contraction that the Pallas kernel also uses as its
+    in-VMEM "scatter" (DESIGN.md §2): dense[b*bz+i, n] = Σ_j 1[idx=i]·val.
+    """
+    k, n = dw.shape
+    fmt = dw.fmt
+    nb = k // fmt.bz
+    g = fmt.group_size(n)
+    ng = n // g
+    onehot = jax.nn.one_hot(dw.indices.astype(jnp.int32), fmt.bz, dtype=dw.values.dtype)
+    # onehot: (nb, nnz, ng, bz); values: (nb, nnz, ng, g)
+    vals = dw.values.reshape(nb, fmt.nnz, ng, g)
+    dense = jnp.einsum("bjgi,bjgc->bigc", onehot, vals)
+    return dense.reshape(k, n)
+
+
+# ---------------------------------------------------------------------------
+# Reference sparse matmuls (pure jnp oracles; kernels/ref.py re-exports)
+# ---------------------------------------------------------------------------
+
+
+def dbb_matmul_ref(a: jax.Array, dw: DBBWeight, *, precision=None) -> jax.Array:
+    """A @ decode(W). Oracle for both kernel modes."""
+    w = dbb_decode(dw).astype(a.dtype)
+    return jnp.matmul(a, w, precision=precision)
+
+
+def dbb_matmul_gather_ref(a: jax.Array, dw: DBBWeight) -> jax.Array:
+    """Compressed-K formulation (group-shared patterns only).
+
+    Ac[m, b, j] = A[m, b*bz + idx[b, j]]  (the activation "mux")
+    out = Ac.reshape(M, nb*nnz) @ values.reshape(nb*nnz, N)
+
+    FLOPs = 2·M·(K·nnz/bz)·N — the time-unrolled occupancy model: cycles
+    per block == nnz, at constant utilization.
+    """
+    fmt = dw.fmt
+    k, n = dw.shape
+    if fmt.group_size(n) != n:
+        raise ValueError("gather formulation requires group='matrix'")
+    nb = k // fmt.bz
+    m = a.shape[0]
+    ab = a.reshape(m, nb, fmt.bz)
+    idx = dw.indices[:, :, 0].astype(jnp.int32)  # (nb, nnz)
+    ac = jnp.take_along_axis(ab, idx.T[None].transpose(0, 2, 1), axis=2)
+    # ac: (m, nb, nnz)
+    return jnp.matmul(
+        ac.reshape(m, nb * fmt.nnz),
+        dw.values.reshape(nb * fmt.nnz, n).astype(a.dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cost accounting (feeds the energy model & roofline)
+# ---------------------------------------------------------------------------
+
+
+def dbb_gemm_costs(m: int, k: int, n: int, fmt: DBBFormat, bits: int = 8) -> dict:
+    """Analytic cost of one M×K×N GEMM under VDBB, paper-style accounting.
+
+    'cycles' follows the time-unrolled occupancy: nnz cycles per block
+    instead of bz. 'weight_bytes' is the compressed stream (values+mask).
+    """
+    dense_macs = m * k * n
+    eff_macs = dense_macs  # effective (useful) ops, paper counts these
+    hw_macs = m * (k // fmt.bz) * fmt.nnz * n  # actually executed
+    wbytes = (k // fmt.bz) * n * (fmt.nnz * bits + fmt.bz) / 8
+    abytes = m * k * bits / 8
+    obytes = m * n * 4  # int32/fp32 accumulators
+    return dict(
+        dense_macs=dense_macs,
+        effective_ops=2 * eff_macs,
+        executed_macs=hw_macs,
+        speedup=fmt.bz / fmt.nnz,
+        weight_bytes=int(wbytes),
+        act_bytes=int(abytes),
+        out_bytes=int(obytes),
+        weight_compression=fmt.compression_ratio(bits),
+    )

@@ -1,0 +1,72 @@
+"""Fused IM2COL + GEMM Pallas kernel — the paper's "bandwidth magnifier".
+
+The paper's hardware IM2COL unit sits *after* SRAM, expanding the activation
+stream 3× right before the datapath so the SRAM never stores or re-reads the
+im2col-duplicated pixels. The TPU-native analogue: read the raw (H, W, C)
+activation tile from HBM exactly once into VMEM and materialize the im2col
+expansion only as *shifted views* feeding the MXU — the conv becomes
+kh·kw shifted (HW, C)×(C, F) matmuls accumulated output-stationary.
+
+HBM activation traffic: H·W·C  (vs kh·kw·H·W·C for explicit im2col+GEMM,
+i.e. 9× less for 3×3 — the paper reports 3× average SRAM-read reduction for
+their 6×2 line buffer; a full-tile VMEM buffer does strictly better).
+
+Layout: NHWC input (pre-padded), HWIO weights, stride 1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _im2col_conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, kh, kw, ho, wo):
+    """Grid: (N, F/bf). x: (1, ho+kh-1, wo+kw-1, C); w: (kh, kw, C, bf)."""
+    c = x_ref.shape[-1]
+    bf = o_ref.shape[-1]
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    x = x_ref[0]
+    # In-VMEM im2col: kh*kw shifted views, each a dense (ho*wo, C) x (C, bf)
+    # MXU matmul. The expansion never touches HBM.
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = x[dy : dy + ho, dx : dx + wo, :].reshape(ho * wo, c)
+            acc_ref[...] += jax.lax.dot(
+                patch,
+                w_ref[dy, dx],
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[...] = acc_ref[...].reshape(1, ho, wo, bf).astype(o_ref.dtype)
+
+
+def im2col_conv(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bf: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """'SAME'-padded stride-1 conv. x: (N, H, W, C); w: (kh, kw, C, F)."""
+    n, h, wd, c = x.shape
+    kh, kw, wc, f = w.shape
+    assert wc == c and kh % 2 == 1 and kw % 2 == 1
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    bf = min(bf, f)
+    assert f % bf == 0
+    grid = (n, f // bf)
+    return pl.pallas_call(
+        functools.partial(_im2col_conv_kernel, kh=kh, kw=kw, ho=h, wo=wd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h + kh - 1, wd + kw - 1, c), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, c, bf), lambda i, j: (0, 0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, h, wd, bf), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, h, wd, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((h * wd, bf), jnp.float32)],
+        interpret=interpret,
+    )(xp, w)

@@ -1,0 +1,55 @@
+"""Jit'd public wrappers around the Pallas kernels with mode dispatch.
+
+``interpret`` defaults to True unless a real TPU backend is present, so the
+same call sites validate on CPU and run compiled on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vdbb import DBBFormat, DBBWeight
+from repro.kernels import im2col_conv as _im2col
+from repro.kernels import vdbb_matmul as _vm
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "kb", "interpret"))
+def vdbb_matmul(
+    a: jax.Array,
+    w: DBBWeight,
+    *,
+    bm: int = 128,
+    bn: int = 256,
+    kb: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """A (M, K) @ compressed DBB W (K, N) -> (M, N). Dispatches tc vs bw on
+    the weight's pattern-sharing mode."""
+    interpret = _default_interpret() if interpret is None else interpret
+    n = w.shape[1]
+    if w.fmt.group_size(n) == n:
+        return _vm.vdbb_matmul_tc(
+            a, w.values, w.indices[:, :, 0], w.fmt, bm=bm, bn=bn, kb=kb, interpret=interpret
+        )
+    if w.fmt.group_size(n) != 1:
+        # grouped-but-not-matrix: expand indices per column, use bw kernel.
+        idx = jnp.repeat(w.indices, w.fmt.group_size(n), axis=2)
+        return _vm.vdbb_matmul_bw(a, w.values, idx, w.fmt, bm=bm, bn=bn, kb=kb, interpret=interpret)
+    return _vm.vdbb_matmul_bw(
+        a, w.values, w.indices, w.fmt, bm=bm, bn=bn, kb=kb, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bf", "interpret"))
+def fused_im2col_conv(
+    x: jax.Array, w: jax.Array, *, bf: int = 128, interpret: bool | None = None
+) -> jax.Array:
+    """Fused im2col+GEMM 'SAME' stride-1 conv (NHWC / HWIO)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _im2col.im2col_conv(x, w, bf=bf, interpret=interpret)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vdbb import (  # noqa: F401  (re-exported oracles)
+    DBBFormat,
+    DBBWeight,
+    dbb_decode,
+    dbb_matmul_gather_ref,
+    dbb_matmul_ref,
+)
+
+
+def vdbb_matmul_ref(a: jax.Array, values: jax.Array, indices: jax.Array, fmt: DBBFormat):
+    """Oracle shared by tc and bw kernels: expand-to-dense then matmul.
+
+    values: (nb, nnz, N); indices: (nb, nnz) [tc, shared pattern] or
+    (nb, nnz, N) [bw, per-column].
+    """
+    import dataclasses
+
+    nb, nnz, n = values.shape
+    if indices.ndim == 2:
+        indices = jnp.broadcast_to(indices[:, :, None], (nb, nnz, n))
+    # decode with per-column semantics regardless of the sharing mode the
+    # kernel used (shared patterns are just repeated columns).
+    fmt_pc = dataclasses.replace(fmt, group=None)
+    dw = DBBWeight(values, indices.astype(jnp.int8), fmt_pc, (nb * fmt.bz, n))
+    return jnp.matmul(a, dbb_decode(dw).astype(a.dtype))
+
+
+def im2col_explicit(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """Explicit im2col producing the duplicated (N, H, W, kh*kw*C) tensor —
+    the memory-footprint blow-up the hardware unit avoids."""
+    n, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = [
+        xp[:, dy : dy + h, dx : dx + w, :] for dy in range(kh) for dx in range(kw)
+    ]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def im2col_conv_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Conv as explicit im2col + GEMM (the baseline the kernel beats)."""
+    kh, kw, c, f = w.shape
+    cols = im2col_explicit(x, kh, kw)  # (N, H, W, kh*kw*C)
+    return jnp.einsum(
+        "nhwk,kf->nhwf", cols, w.transpose(0, 1, 2, 3).reshape(kh * kw * c, f)
+    ).astype(x.dtype)
+
+
+def conv_lax_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """XLA native conv oracle (NHWC, HWIO, SAME, stride 1)."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ).astype(x.dtype)

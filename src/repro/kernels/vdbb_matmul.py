@@ -1,0 +1,183 @@
+"""Pallas TPU kernel for the time-unrolled VDBB sparse matmul.
+
+Two modes, mirroring DESIGN.md §2:
+
+* ``tc`` (tile-coupled / group-shared patterns, ``fmt.group == 'matrix'``):
+  the activation "mux" of the paper's S8DP1 lane becomes an in-VMEM one-hot
+  contraction that builds a *compressed-K* activation tile; the MAC stream
+  becomes a dense MXU matmul over K_c = K·nnz/bz. FLOPs *and* HBM weight
+  bytes scale with nnz/bz, at full MXU utilization for any nnz — the
+  "constant utilization, variable occupancy" property.
+
+* ``bw`` (paper-faithful per-column patterns): compressed weights are
+  expanded to a dense block inside VMEM right before the dot (the analogue
+  of the mux sitting right before the MAC). HBM weight traffic scales with
+  nnz/bz; compute stays dense. This is the variant that matches the ASIC's
+  storage format bit-for-bit.
+
+Both kernels use an output-stationary fp32 accumulator tile in VMEM —
+the systolic array's output-stationary dataflow — with the K-block grid
+dimension innermost.
+
+Tiling taxonomy (paper's A×B×C_M×N → BlockSpec): bm×bn is the TPE array
+footprint (output tile), bz=B is the block size, kb is how many blocks
+stream per grid step. MXU alignment wants bm, bn multiples of 128 and
+kb·nnz (tc) / kb·bz (bw) multiples of the lane width on real hardware;
+interpret mode (CPU validation) accepts any shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.vdbb import DBBFormat, DBBWeight
+
+
+# ---------------------------------------------------------------------------
+# tc mode: gather-compressed-K (group-shared pattern)
+# ---------------------------------------------------------------------------
+
+
+def _vdbb_tc_kernel(a_ref, v_ref, idx_ref, o_ref, acc_ref, *, bz, nnz, kb):
+    """Grid: (M/bm, N/bn, NB/kb). a: (bm, kb*bz); v: (kb*nnz, bn);
+    idx: (kb, nnz) int32; acc: (bm, bn) f32 VMEM scratch."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bm = a_ref.shape[0]
+    a = a_ref[...].reshape(bm, kb, bz)
+    idx = idx_ref[...]  # (kb, nnz)
+    # The activation mux: one-hot gather A[:, k, idx[k, j]] -> (bm, kb, nnz).
+    onehot = jax.nn.one_hot(idx, bz, dtype=a.dtype)  # (kb, nnz, bz)
+    ac = jax.lax.dot_general(
+        a,
+        onehot,
+        dimension_numbers=(((2,), (2,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # (kb, bm, nnz)
+    ac = ac.transpose(1, 0, 2).reshape(bm, kb * nnz).astype(a.dtype)
+    acc_ref[...] += jax.lax.dot(
+        ac, v_ref[...].astype(a.dtype), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def vdbb_matmul_tc(
+    a: jax.Array,
+    values: jax.Array,
+    indices: jax.Array,
+    fmt: DBBFormat,
+    *,
+    bm: int = 128,
+    bn: int = 256,
+    kb: int = 16,
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    """A (M, K) × compressed W -> (M, N). values: (nb, nnz, N);
+    indices: (nb, nnz) int (pattern shared across N)."""
+    m, k = a.shape
+    nb, nnz, n = values.shape
+    bz = fmt.bz
+    assert nb * bz == k and nnz == fmt.nnz
+    bm = min(bm, m)
+    bn = min(bn, n)
+    kb = min(kb, nb)
+    assert m % bm == 0 and n % bn == 0 and nb % kb == 0
+    v2 = values.reshape(nb * nnz, n)
+    idx = indices.astype(jnp.int32)
+    grid = (m // bm, n // bn, nb // kb)
+    out_dtype = out_dtype or a.dtype
+    return pl.pallas_call(
+        functools.partial(_vdbb_tc_kernel, bz=bz, nnz=nnz, kb=kb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kb * bz), lambda i, j, s: (i, s)),
+            pl.BlockSpec((kb * nnz, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((kb, nnz), lambda i, j, s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, v2, idx)
+
+
+# ---------------------------------------------------------------------------
+# bw mode: in-VMEM expand (paper-faithful per-column pattern)
+# ---------------------------------------------------------------------------
+
+
+def _vdbb_bw_kernel(a_ref, v_ref, idx_ref, o_ref, acc_ref, *, bz, nnz, kb):
+    """Grid: (M/bm, N/bn, NB/kb). a: (bm, kb*bz); v: (kb*nnz, bn);
+    idx: (kb*nnz, bn) int32 — per-column patterns."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bm = a_ref.shape[0]
+    bn = o_ref.shape[1]
+    v = v_ref[...].reshape(kb, nnz, bn)
+    idx = idx_ref[...].reshape(kb, nnz, bn)
+    # In-VMEM scatter-expand right before the dot (the "late mux"):
+    # wd[k, i, n] = sum_j [idx[k, j, n] == i] * v[k, j, n]
+    i_iota = jax.lax.broadcasted_iota(jnp.int32, (kb, bz, nnz, bn), 1)
+    sel = (idx[:, None, :, :] == i_iota).astype(v.dtype)
+    wd = (sel * v[:, None, :, :]).sum(axis=2)  # (kb, bz, bn)
+    wd = wd.reshape(kb * bz, bn)
+    acc_ref[...] += jax.lax.dot(
+        a_ref[...], wd.astype(a_ref.dtype), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def vdbb_matmul_bw(
+    a: jax.Array,
+    values: jax.Array,
+    indices: jax.Array,
+    fmt: DBBFormat,
+    *,
+    bm: int = 128,
+    bn: int = 256,
+    kb: int = 8,
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    """A (M, K) × compressed W -> (M, N). values/indices: (nb, nnz, N)."""
+    m, k = a.shape
+    nb, nnz, n = values.shape
+    bz = fmt.bz
+    assert nb * bz == k and nnz == fmt.nnz
+    bm = min(bm, m)
+    bn = min(bn, n)
+    kb = min(kb, nb)
+    assert m % bm == 0 and n % bn == 0 and nb % kb == 0
+    v2 = values.reshape(nb * nnz, n)
+    idx2 = indices.astype(jnp.int32).reshape(nb * nnz, n)
+    grid = (m // bm, n // bn, nb // kb)
+    out_dtype = out_dtype or a.dtype
+    return pl.pallas_call(
+        functools.partial(_vdbb_bw_kernel, bz=bz, nnz=nnz, kb=kb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kb * bz), lambda i, j, s: (i, s)),
+            pl.BlockSpec((kb * nnz, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((kb * nnz, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, v2, idx2)

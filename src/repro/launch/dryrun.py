@@ -1,0 +1,378 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent — shardings
+propagate, collectives are legal, compile-time memory fits — and records
+memory_analysis / cost_analysis / per-collective byte counts for the
+roofline report (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--sparsity 0.625]
+
+Results cache to benchmarks/results/dryrun/<cell>.json; --force recomputes.
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, cell_runnable, get_config, input_specs
+from repro.core.sparse_linear import PruneSchedule
+from repro.launch.mesh import make_production_mesh, tp_degree
+from repro.models.common import sharding_rules
+from repro.models.model import LM
+from repro.optim.adamw import OptConfig, init_state
+from repro.sharding.rules import attn_mode, make_rules
+from repro.train.step import make_prefill, make_serve_step, make_train_step
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w+\[[^\]]*\](?:, \w+\[[^\]]*\])*\)?)?\s*"  # unused; kept simple below
+)
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_bytes(text: str, tpu_equiv: bool = False) -> int:
+    """Sum bytes of every shape in text. With tpu_equiv, f32/f64 count at
+    2 bytes: the CPU backend's float-normalization pass upcasts every bf16
+    dot/collective to f32 (verified: all JAX-level tensors are bf16), an
+    artifact a TPU build does not have — see EXPERIMENTS.md §Method."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        sz = _DTYPE_BYTES[dt]
+        if tpu_equiv and dt in ("f64", "f32"):
+            sz = 2
+        total += n * sz
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the optimized HLO.
+
+    The module is the per-device SPMD program, so these are bytes per chip;
+    the roofline multiplies by chips for the global wire volume.
+    """
+    out = {k: 0 for k in COLLECTIVES}
+    equiv = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result-defining lines look like: %name = TYPE[...] op-name(...)
+        m = re.match(r"%?[\w.\-]+ = (.*?) (\w[\w\-]*)\(", s)
+        if not m:
+            continue
+        opname = m.group(2)
+        for c in COLLECTIVES:
+            if opname == c or opname.startswith(c + "-"):
+                out[c] += _shape_bytes(m.group(1))
+                equiv[c] += _shape_bytes(m.group(1), tpu_equiv=True)
+                counts[c] += 1
+                break
+    return {"bytes": out, "counts": counts, "total_bytes": sum(out.values()),
+            "tpu_equiv_total_bytes": sum(equiv.values())}
+
+
+def _shardings(mesh, pspecs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _lower(cfg, shape_name, mesh, rules, *, seq_len=None, global_batch=None):
+    """Lower + compile the cell's step function for ``cfg``. Returns compiled."""
+    sh = dict(SHAPES[shape_name])
+    if seq_len:
+        sh["seq_len"] = seq_len
+    if global_batch:
+        sh["global_batch"] = global_batch
+    kind = sh["kind"]
+    model = LM(cfg)
+    import repro.configs.shapes as shp
+
+    # build specs for (possibly overridden) shape
+    b, s = sh["global_batch"], sh["seq_len"]
+    if kind in ("train", "prefill"):
+        batch_specs = {"tokens": shp._tok_spec(cfg, b, s)}
+        if kind == "train":
+            if cfg.frontend == "audio":
+                batch_specs["labels"] = jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), jnp.int32)
+            else:
+                batch_specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            batch_specs["loss_mask"] = jax.ShapeDtypeStruct((b, s), jnp.float32)
+        if cfg.frontend == "vision":
+            batch_specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_vision_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.cross_attn:
+            batch_specs["memory"] = jax.ShapeDtypeStruct((b, cfg.cross_len, cfg.d_model), jnp.bfloat16)
+    else:
+        batch_specs = {"tokens": shp._tok_spec(cfg, b, 1)}
+        if cfg.cross_attn:
+            batch_specs["memory"] = jax.ShapeDtypeStruct((b, cfg.cross_len, cfg.d_model), jnp.bfloat16)
+    dp = rules["batch"]
+
+    def batch_pspec(leaf_name, leaf):
+        if leaf_name == "tokens" and kind != "decode":
+            extra = ("model",) + (None,) * (leaf.ndim - 2)
+            return P(dp, *extra)  # seq-sharded tokens feed the SP residual
+        return P(dp, *([None] * (leaf.ndim - 1)))
+
+    batch_shardings = {
+        k: NamedSharding(mesh, batch_pspec(k, v)) for k, v in batch_specs.items()
+    }
+
+    with mesh, sharding_rules(rules, mesh):
+        if kind == "train":
+            params_ab = model.abstract()
+            params_sh = _shardings(mesh, model.pspecs(rules))
+            opt_ab = jax.eval_shape(lambda p: init_state(p, OptConfig()), params_ab)
+            opt_specs = {
+                "m": model.pspecs(rules),
+                "v": model.pspecs(rules),
+                "count": P(),
+            }
+            if "master" in opt_ab:
+                opt_specs["master"] = model.pspecs(rules)
+            opt_sh = _shardings(mesh, opt_specs)
+            step_ab = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = make_train_step(model, OptConfig(), PruneSchedule(0, 1000))
+            jfn = jax.jit(
+                fn,
+                in_shardings=(params_sh, opt_sh, batch_shardings, NamedSharding(mesh, P())),
+                out_shardings=(params_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jfn.lower(params_ab, opt_ab, batch_specs, step_ab)
+        elif kind == "prefill":
+            if cfg.serve_compressed and cfg.dbb is not None:
+                params_ab = model.compressed_abstract()
+                params_sh = _shardings(mesh, model.compressed_pspecs(rules))
+            else:
+                params_ab = model.abstract()
+                params_sh = _shardings(mesh, model.pspecs(rules))
+            fn = make_prefill(model)
+            jfn = jax.jit(fn, in_shardings=(params_sh, batch_shardings))
+            lowered = jfn.lower(params_ab, batch_specs)
+        else:  # decode
+            if cfg.serve_compressed and cfg.dbb is not None:
+                params_ab = model.compressed_abstract()
+                params_sh = _shardings(mesh, model.compressed_pspecs(rules))
+            else:
+                params_ab = model.abstract()
+                params_sh = _shardings(mesh, model.pspecs(rules))
+            cache_ab = model.cache_abstract(b, sh["seq_len"])
+            cache_sh = _shardings(mesh, model.cache_pspecs(rules))
+            fn = make_serve_step(model)
+            jfn = jax.jit(
+                fn,
+                in_shardings=(params_sh, cache_sh, batch_shardings, NamedSharding(mesh, P())),
+                out_shardings=(NamedSharding(mesh, P(dp, None, "model")), cache_sh),
+                donate_argnums=(1,),
+            )
+            pos_ab = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jfn.lower(params_ab, cache_ab, batch_specs, pos_ab)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _cost_record(compiled):
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        "transcendentals": cost.get("transcendentals"),
+        "collectives": coll,
+    }
+
+
+def micro_extrapolate(cfg, shape_name, mesh, rules) -> dict:
+    """Exact per-device roofline terms via unrolled micro-compiles.
+
+    XLA's HLO cost analysis counts while-loop (lax.scan) bodies ONCE, not
+    per trip — so the full scanned program under-reports FLOPs/bytes by
+    ~num_groups x. We unroll 1 and 2 pattern-groups (cheap compiles),
+    take the per-group delta, and extrapolate:
+        total(L) = base + delta * (num_groups + tail/len(pattern)).
+    """
+    import dataclasses as dc
+
+    pat = len(cfg.pattern)
+    c1 = dc.replace(cfg, num_layers=pat, scan_layers=False)
+    c2 = dc.replace(cfg, num_layers=2 * pat, scan_layers=False)
+    r1 = _cost_record(_lower(c1, shape_name, mesh, rules))
+    r2 = _cost_record(_lower(c2, shape_name, mesh, rules))
+    groups_eff = cfg.num_groups + len(cfg.tail_pattern) / pat
+
+    def extrap(f1, f2):
+        delta = f2 - f1
+        return f1 + delta * (groups_eff - 1), delta
+
+    flops, flops_g = extrap(r1["flops"], r2["flops"])
+    bytes_, bytes_g = extrap(r1["bytes_accessed"], r2["bytes_accessed"])
+    coll, coll_g = extrap(
+        r1["collectives"]["total_bytes"], r2["collectives"]["total_bytes"]
+    )
+    coll_eq, _ = extrap(
+        r1["collectives"]["tpu_equiv_total_bytes"],
+        r2["collectives"]["tpu_equiv_total_bytes"],
+    )
+    coll_kinds = {
+        k: r1["collectives"]["bytes"][k]
+        + (r2["collectives"]["bytes"][k] - r1["collectives"]["bytes"][k])
+        * (groups_eff - 1)
+        for k in r1["collectives"]["bytes"]
+    }
+    return {
+        "method": "unrolled micro-compile extrapolation (L=1,2 pattern groups)",
+        "per_device_flops": flops,
+        "per_device_bytes": bytes_,
+        "per_device_collective_bytes": coll,
+        "per_device_collective_bytes_tpu_equiv": coll_eq,
+        "collective_bytes_by_kind": coll_kinds,
+        "per_group_flops": flops_g,
+        "per_group_bytes": bytes_g,
+        "per_group_collective_bytes": coll_g,
+        "l1": r1,
+        "l2": r2,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, sparsity=0.625,
+               micro: bool = True, cfg=None):
+    """Build + lower + compile one cell. Returns the result record."""
+    sh = SHAPES[shape_name]
+    cfg = cfg or get_config(arch, sparsity=sparsity)
+    ok, reason = cell_runnable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "sparsity": sparsity, "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = tp_degree(mesh)
+    kind = sh["kind"]
+    rules = make_rules(cfg, tp=tp, multi_pod=multi_pod, mode=kind)
+    # batch must divide the DP extent; replicate otherwise (long_500k b=1)
+    dp_size = 1
+    for ax in (rules["batch"] if isinstance(rules["batch"], tuple) else (rules["batch"],)):
+        dp_size *= mesh.shape[ax]
+    if sh["global_batch"] % dp_size != 0:
+        rules = dict(rules, batch=None)
+
+    t0 = time.time()
+    compiled = _lower(cfg, shape_name, mesh, rules)
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "sparsity": sparsity, "status": "ok", "kind": kind,
+        "attn_mode": attn_mode(cfg, tp),
+        "mesh": dict(zip(mesh.axis_names, [int(mesh.shape[a]) for a in mesh.axis_names])),
+        "chips": int(len(mesh.devices.flat)),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "transcendentals": cost.get("transcendentals"),
+        },
+        "collectives": coll,
+        "hlo_caveat": "cost_analysis counts lax.scan bodies once; see 'micro' for extrapolated true per-step costs",
+    }
+    if micro and cfg.scan_layers:
+        try:
+            rec["micro"] = micro_extrapolate(cfg, shape_name, mesh, rules)
+        except Exception as e:  # noqa: BLE001
+            rec["micro"] = {"status": "error", "error": f"{type(e).__name__}: {e}"}
+    return rec
+
+
+def cell_key(arch, shape, multi_pod, sparsity):
+    pod = "pod2" if multi_pod else "pod1"
+    return f"{arch}__{shape}__{pod}__s{sparsity}"
+
+
+def run_and_save(arch, shape, *, multi_pod, sparsity=0.625, force=False, micro=True):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    key = cell_key(arch, shape, multi_pod, sparsity)
+    out = RESULTS_DIR / f"{key}.json"
+    if out.exists() and not force:
+        rec = json.loads(out.read_text())
+        print(f"[cached] {key}: {rec['status']}")
+        return rec
+    print(f"[run] {key} ...", flush=True)
+    try:
+        rec = lower_cell(arch, shape, multi_pod=multi_pod, sparsity=sparsity, micro=micro)
+    except Exception as e:  # noqa: BLE001 — record the failure for triage
+        rec = {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+               "sparsity": sparsity, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    out.write_text(json.dumps(rec, indent=1))
+    print(f"  -> {rec['status']}"
+          + (f" compile={rec.get('compile_s')}s" if rec["status"] == "ok" else
+             f" ({rec.get('reason', rec.get('error', ''))[:120]})"), flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--sparsity", default=0.625, type=float)
+    ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    from repro.configs import ARCHS
+
+    sparsity = None if args.dense else args.sparsity
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    n_ok = n_skip = n_err = 0
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_and_save(a, s, multi_pod=mp, sparsity=sparsity,
+                                   force=args.force, micro=not mp)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+                n_err += rec["status"] == "error"
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Training launcher.
+
+Single-host CPU runs use reduced (smoke) configs directly; on a TPU pod the
+same entry point builds the production mesh and shards params/optimizer via
+the arch's sharding rules. Auto-resumes from the latest checkpoint.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-72b --smoke \
+      --steps 50 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, smoke_config
+from repro.core.sparse_linear import PruneSchedule
+from repro.data.pipeline import DataConfig
+from repro.models.common import sharding_rules
+from repro.models.model import LM
+from repro.optim.adamw import OptConfig
+from repro.sharding.rules import make_rules
+from repro.train.loop import LoopConfig, Trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--sparsity", type=float, default=0.625)
+    ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--prune-anneal-steps", type=int, default=0)
+    ap.add_argument("--distributed", action="store_true",
+                    help="build the production mesh and shard (TPU pods)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    sparsity = None if args.dense else args.sparsity
+    cfg = (smoke_config if args.smoke else get_config)(args.arch, sparsity=sparsity)
+    model = LM(cfg)
+    opt = OptConfig(
+        peak_lr=args.lr,
+        warmup_steps=max(args.steps // 20, 5),
+        decay_steps=args.steps,
+        grad_compression=args.grad_compression,
+    )
+    data = DataConfig(seq_len=args.seq_len, global_batch=args.global_batch)
+    loop = LoopConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every
+    )
+    sched = (
+        PruneSchedule(0, args.prune_anneal_steps) if args.prune_anneal_steps else None
+    )
+
+    if args.distributed:
+        from jax.sharding import NamedSharding
+
+        from repro.launch.mesh import make_production_mesh, tp_degree
+
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        rules = make_rules(cfg, tp=tp_degree(mesh), multi_pod=args.multi_pod, mode="train")
+        pspecs = model.pspecs(rules)
+        shardings = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+        with mesh, sharding_rules(rules, mesh):
+            trainer = Trainer(model, opt, data, loop, sched,
+                              jit_kwargs=dict(in_shardings=None))
+            trainer.run()
+    else:
+        trainer = Trainer(model, opt, data, loop, sched)
+        params, _, history = trainer.run()
+        if len(history) >= 2:
+            print(f"loss: {history[0][1]:.3f} -> {history[-1][1]:.3f}")
+        return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.model import LM  # noqa: F401

@@ -1,0 +1,327 @@
+"""Attention mixers: GQA (with bias/RoPE/local windows) and MLA.
+
+Train/prefill paths operate on full sequences with q-chunking (bounded
+score tensors); decode paths consume/update a KV cache. MLA decode uses the
+absorbed-matmul formulation so the cache stays in the compressed latent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    Param,
+    apply_linear,
+    linear_def,
+    rms_norm,
+    rope,
+    shard,
+)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core masked attention (q-chunked)
+# ---------------------------------------------------------------------------
+
+
+def _attend(q, k, v, q_pos, k_pos, *, window: int = 0, kv_valid_len=None):
+    """q: (B,Sq,Kv,G,D); k/v: (B,Sk,Kv,D); positions for causal masking.
+
+    Returns (B,Sq,Kv,G,D). fp32 softmax, bf16 matmuls.
+
+    Score/prob tensors carry explicit sharding constraints — without them
+    the SPMD partitioner loses the head sharding inside the (rematted)
+    q-chunk scan backward and falls back to full replication (measured:
+    ~43 GB/layer of involuntary all-gathers on qwen2-72b; EXPERIMENTS §Perf).
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32) * scale
+    s = shard(s, ("batch", "heads", None, "act_seq", None))
+    mask = q_pos[:, None] >= k_pos[None, :]  # causal
+    if window:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    if kv_valid_len is not None:
+        mask = mask & (k_pos[None, :] < kv_valid_len)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    p = shard(p, ("batch", "heads", None, "act_seq", None))
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return shard(out, ("batch", "act_seq", "heads", None, None))
+
+
+def attend_chunked(q, k, v, q_pos, k_pos, *, window=0, q_chunk=1024, kv_valid_len=None):
+    b, sq, kvh, g, d = q.shape
+    dv = v.shape[-1]  # may differ from q/k dim (MLA: 192 qk vs 128 v)
+    if sq <= q_chunk:
+        return _attend(q, k, v, q_pos, k_pos, window=window, kv_valid_len=kv_valid_len)
+    n = sq // q_chunk
+    assert sq % q_chunk == 0, (sq, q_chunk)
+    qs = q.reshape(b, n, q_chunk, kvh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    qs = shard(qs, (None, "batch", None, "heads", None, None))
+    ps = q_pos.reshape(n, q_chunk)
+
+    def body(_, qc):
+        qq, pp = qc
+        return None, _attend(qq, k, v, pp, k_pos, window=window, kv_valid_len=kv_valid_len)
+
+    _, out = jax.lax.scan(body, None, (qs, ps))
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, kvh, g, dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GQAttention:
+    cfg: "ModelConfig"  # noqa: F821
+    window: int = 0  # 0 = global causal
+    cross: bool = False  # cross-attention (kv from encoder memory, no mask)
+
+    def defs(self):
+        c = self.cfg
+        hd = c.hd
+        dbb = c.dbb
+        d = {
+            "wq": linear_def(c.d_model, c.num_heads * hd, "embed", "heads", dbb=dbb),
+            "wk": linear_def(c.d_model, c.num_kv_heads * hd, "embed", "kv", dbb=dbb),
+            "wv": linear_def(c.d_model, c.num_kv_heads * hd, "embed", "kv", dbb=dbb),
+            "wo": linear_def(c.num_heads * hd, c.d_model, "heads", "embed", dbb=dbb),
+        }
+        if c.qkv_bias:
+            d["bq"] = Param((c.num_heads * hd,), ("heads",), "zeros")
+            d["bk"] = Param((c.num_kv_heads * hd,), ("kv",), "zeros")
+            d["bv"] = Param((c.num_kv_heads * hd,), ("kv",), "zeros")
+        return d
+
+    # -------------------------------------------------------------- train
+    def __call__(self, p, x, positions, memory=None):
+        """Full-sequence forward. x: (B,S,d). Returns (out, cache_kv)."""
+        c = self.cfg
+        hd = c.hd
+        b, s, _ = x.shape
+        kv_src = memory if self.cross else x
+        q = apply_linear(x, p["wq"], p.get("bq"))
+        k = apply_linear(kv_src, p["wk"], p.get("bk"))
+        v = apply_linear(kv_src, p["wv"], p.get("bv"))
+        q = q.reshape(b, s, c.num_heads, hd)
+        k = k.reshape(b, kv_src.shape[1], c.num_kv_heads, hd)
+        v = v.reshape(b, kv_src.shape[1], c.num_kv_heads, hd)
+        if not self.cross:
+            q = rope(q, positions, c.rope_theta)
+            k = rope(k, positions, c.rope_theta)
+        # Expand KV to the full query-head count BEFORE attention: the head
+        # dim then shards cleanly on 'model' even when kv_heads < TP (the
+        # grouped (kv, g) factorization is unshardable when neither factor
+        # divides TP — the source of involuntary replication; §Perf H1).
+        k_cache, v_cache = k, v  # cache keeps the compact kv-head layout
+        g = c.num_heads // c.num_kv_heads
+        if g > 1:
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        q = shard(q, ("batch", "act_seq", "heads", None))
+        k = shard(k, ("batch", "act_seq", "heads", None))
+        v = shard(v, ("batch", "act_seq", "heads", None))
+        qg = q.reshape(b, s, c.num_heads, 1, hd)
+        if self.cross:
+            kp = jnp.zeros((kv_src.shape[1],), jnp.int32)
+            qp = jnp.full((s,), 1, jnp.int32)  # attend to all memory
+            out = attend_chunked(qg, k, v, qp, kp, q_chunk=c.q_chunk)
+        else:
+            pos1 = positions[0] if positions.ndim == 2 else positions
+            out = attend_chunked(
+                qg, k, v, pos1, pos1, window=self.window, q_chunk=c.q_chunk
+            )
+        out = out.reshape(b, s, c.num_heads * hd)
+        y = apply_linear(out, p["wo"])
+        return y, {"k": k_cache, "v": v_cache}
+
+    # ------------------------------------------------------------- decode
+    def init_cache(self, batch, max_len, dtype):
+        c = self.cfg
+        cap = min(self.window, max_len) if self.window else max_len
+        if self.cross:
+            cap = c.cross_len
+        return {
+            "k": jnp.zeros((batch, cap, c.num_kv_heads, c.hd), dtype),
+            "v": jnp.zeros((batch, cap, c.num_kv_heads, c.hd), dtype),
+        }
+
+    def decode(self, p, x, cache, pos):
+        """x: (B,1,d); pos: scalar int32 current position. Returns (y, cache)."""
+        c = self.cfg
+        hd = c.hd
+        b = x.shape[0]
+        q = apply_linear(x, p["wq"], p.get("bq")).reshape(b, 1, c.num_heads, hd)
+        if self.cross:
+            # cross K/V were precomputed at prefill; cache is read-only.
+            k, v = cache["k"], cache["v"]
+            qg = q.reshape(b, 1, c.num_kv_heads, c.num_heads // c.num_kv_heads, hd)
+            kp = jnp.zeros((k.shape[1],), jnp.int32)
+            out = _attend(qg, k, v, jnp.ones((1,), jnp.int32), kp)
+            y = apply_linear(out.reshape(b, 1, c.num_heads * hd), p["wo"])
+            return y, cache
+        posv = jnp.full((b, 1), pos, jnp.int32)
+        q = rope(q, posv, c.rope_theta)
+        k_new = apply_linear(x, p["wk"], p.get("bk")).reshape(b, 1, c.num_kv_heads, hd)
+        v_new = apply_linear(x, p["wv"], p.get("bv")).reshape(b, 1, c.num_kv_heads, hd)
+        k_new = rope(k_new, posv, c.rope_theta)
+        cap = cache["k"].shape[1]
+        slot = jnp.mod(pos, cap) if self.window else jnp.minimum(pos, cap - 1)
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+        k = shard(k, ("batch", "cache_seq", "kv", None))
+        v = shard(v, ("batch", "cache_seq", "kv", None))
+        qg = q.reshape(b, 1, c.num_kv_heads, c.num_heads // c.num_kv_heads, hd)
+        if self.window:
+            # ring buffer: absolute positions of slots
+            base = pos - slot
+            kpos = jnp.arange(cap, dtype=jnp.int32)
+            kpos = jnp.where(kpos <= slot, base + kpos, base - cap + kpos)
+            kpos = jnp.where(kpos < 0, jnp.iinfo(jnp.int32).max, kpos)  # unfilled
+        else:
+            kpos = jnp.arange(cap, dtype=jnp.int32)
+        out = _attend(
+            qg, k, v, jnp.full((1,), pos, jnp.int32), kpos,
+            window=self.window, kv_valid_len=pos + 1,
+        )
+        y = apply_linear(out.reshape(b, 1, c.num_heads * hd), p["wo"])
+        return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, deepseek-style)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAttention:
+    cfg: "ModelConfig"  # noqa: F821
+
+    def defs(self):
+        c = self.cfg
+        dbb = c.dbb
+        qd = c.qk_nope_dim + c.qk_rope_dim
+        d = {}
+        if c.q_lora_rank:
+            d["wq_a"] = linear_def(c.d_model, c.q_lora_rank, "embed", None, dbb=dbb)
+            d["q_norm"] = Param((c.q_lora_rank,), (None,), "ones")
+            d["wq_b"] = linear_def(c.q_lora_rank, c.num_heads * qd, None, "heads", dbb=dbb)
+        else:
+            d["wq"] = linear_def(c.d_model, c.num_heads * qd, "embed", "heads", dbb=dbb)
+        d["wkv_a"] = linear_def(
+            c.d_model, c.kv_lora_rank + c.qk_rope_dim, "embed", None, dbb=dbb
+        )
+        d["kv_norm"] = Param((c.kv_lora_rank,), (None,), "ones")
+        d["wkv_b"] = linear_def(
+            c.kv_lora_rank,
+            c.num_heads * (c.qk_nope_dim + c.v_head_dim),
+            None,
+            "heads",
+            dbb=dbb,
+        )
+        d["wo"] = linear_def(c.num_heads * c.v_head_dim, c.d_model, "heads", "embed", dbb=dbb)
+        return d
+
+    def _q(self, p, x):
+        c = self.cfg
+        b, s, _ = x.shape
+        qd = c.qk_nope_dim + c.qk_rope_dim
+        if c.q_lora_rank:
+            q = apply_linear(rms_norm(apply_linear(x, p["wq_a"]), p["q_norm"]), p["wq_b"])
+        else:
+            q = apply_linear(x, p["wq"])
+        return q.reshape(b, s, c.num_heads, qd)
+
+    def __call__(self, p, x, positions, memory=None):
+        c = self.cfg
+        b, s, _ = x.shape
+        q = self._q(p, x)
+        q_nope, q_rope = q[..., : c.qk_nope_dim], q[..., c.qk_nope_dim :]
+        q_rope = rope(q_rope, positions, c.rope_theta)
+        kv_a = apply_linear(x, p["wkv_a"])
+        c_kv = rms_norm(kv_a[..., : c.kv_lora_rank], p["kv_norm"])
+        k_rope = rope(
+            kv_a[..., c.kv_lora_rank :].reshape(b, s, 1, c.qk_rope_dim),
+            positions,
+            c.rope_theta,
+        )
+        kv = apply_linear(c_kv, p["wkv_b"]).reshape(
+            b, s, c.num_heads, c.qk_nope_dim + c.v_head_dim
+        )
+        k_nope, v = kv[..., : c.qk_nope_dim], kv[..., c.qk_nope_dim :]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, c.num_heads, c.qk_rope_dim))], -1
+        )
+        qf = jnp.concatenate([q_nope, q_rope], -1)
+        qf = shard(qf, ("batch", "act_seq", "heads", None))
+        k = shard(k, ("batch", "act_seq", "heads", None))
+        pos1 = positions[0] if positions.ndim == 2 else positions
+        out = attend_chunked(
+            qf[:, :, :, None, :].reshape(b, s, c.num_heads, 1, -1),
+            k,
+            v,
+            pos1,
+            pos1,
+            q_chunk=c.q_chunk,
+        )
+        out = out.reshape(b, s, c.num_heads * c.v_head_dim)
+        y = apply_linear(out, p["wo"])
+        return y, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
+
+    def init_cache(self, batch, max_len, dtype):
+        c = self.cfg
+        return {
+            "c_kv": jnp.zeros((batch, max_len, c.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, c.qk_rope_dim), dtype),
+        }
+
+    def decode(self, p, x, cache, pos):
+        """Absorbed-matmul decode: scores and context in the latent space."""
+        c = self.cfg
+        b = x.shape[0]
+        posv = jnp.full((b, 1), pos, jnp.int32)
+        q = self._q(p, x)
+        q_nope, q_rope = q[..., : c.qk_nope_dim], q[..., c.qk_nope_dim :]
+        q_rope = rope(q_rope, posv, c.rope_theta)
+        kv_a = apply_linear(x, p["wkv_a"])
+        c_kv_new = rms_norm(kv_a[..., : c.kv_lora_rank], p["kv_norm"])
+        k_rope_new = rope(
+            kv_a[..., c.kv_lora_rank :].reshape(b, 1, 1, c.qk_rope_dim), posv, c.rope_theta
+        )[:, :, 0, :]
+        ckv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, pos, 0)
+        )
+        krp = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, pos, 0)
+        )
+        ckv = shard(ckv, ("batch", "cache_seq", None))
+        wkv_b = p["wkv_b"].reshape(c.kv_lora_rank, c.num_heads, c.qk_nope_dim + c.v_head_dim) \
+            if not hasattr(p["wkv_b"], "fmt") else None
+        if wkv_b is None:  # compressed serving: decode via expanded weight
+            from repro.core.vdbb import dbb_decode
+
+            wkv_b = dbb_decode(p["wkv_b"]).reshape(
+                c.kv_lora_rank, c.num_heads, c.qk_nope_dim + c.v_head_dim
+            )
+        w_uk = wkv_b[..., : c.qk_nope_dim]  # (r, H, nope)
+        w_uv = wkv_b[..., c.qk_nope_dim :]  # (r, H, v)
+        q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk.astype(x.dtype))
+        s_lat = jnp.einsum("bqhr,bsr->bhqs", q_c, ckv.astype(x.dtype))
+        s_rope = jnp.einsum("bqhp,bsp->bhqs", q_rope, krp.astype(x.dtype))
+        scale = 1.0 / jnp.sqrt(c.qk_nope_dim + c.qk_rope_dim)
+        s = (s_lat + s_rope).astype(jnp.float32) * scale
+        kpos = jnp.arange(ckv.shape[1], dtype=jnp.int32)
+        s = jnp.where((kpos <= pos)[None, None, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", pr, ckv.astype(x.dtype))
+        out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv.astype(x.dtype))
+        y = apply_linear(out.reshape(b, 1, c.num_heads * c.v_head_dim), p["wo"])
+        return y, {"c_kv": ckv, "k_rope": krp}

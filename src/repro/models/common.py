@@ -1,0 +1,278 @@
+"""Functional-module plumbing shared by the model zoo.
+
+Params are plain pytrees (nested dicts of arrays). Every module is described
+once by a ``defs()`` tree of :class:`Param` leaves, from which we derive both
+the initialized arrays and the logical-axis PartitionSpecs — one source of
+truth for shapes and sharding.
+
+Logical axes used across the zoo:
+  'batch'   — data parallel (mesh: ('pod',) 'data')
+  'seq'     — sequence parallel (mesh: 'model')
+  'embed'   — residual/feature dim
+  'heads'   — attention heads (mesh: 'model' when divisible)
+  'kv'      — kv heads
+  'mlp'     — FFN hidden (mesh: 'model')
+  'experts' — MoE experts (mesh: 'model')
+  'vocab'   — embedding rows / logits (mesh: 'model')
+  None      — replicated
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vdbb import DBBFormat, DBBWeight, dbb_prune
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: tuple
+    axes: tuple  # logical axis name (or None) per dim
+    init: str = "normal"  # 'normal' | 'zeros' | 'ones' | 'scaled'
+    scale: float = 1.0
+    dtype: Any = None  # defaults to the model's param dtype
+    # DBB sparsity: set for weights the paper's technique applies to.
+    dbb: Optional[DBBFormat] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_params(defs, key, default_dtype=jnp.float32):
+    """Initialize arrays for a defs tree (dict-of-dicts with Param leaves)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, Param)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for p, k in zip(leaves, keys):
+        dtype = p.dtype or default_dtype
+        if p.init == "zeros":
+            w = jnp.zeros(p.shape, dtype)
+        elif p.init == "ones":
+            w = jnp.ones(p.shape, dtype)
+        elif p.init == "scaled":  # fan-in scaled truncated normal
+            fan_in = p.shape[0] if len(p.shape) >= 2 else max(p.shape[0], 1)
+            std = p.scale / np.sqrt(fan_in)
+            w = std * jax.random.truncated_normal(k, -2, 2, p.shape).astype(dtype)
+        else:
+            w = p.scale * jax.random.normal(k, p.shape).astype(dtype)
+        if p.dbb is not None and not p.dbb.is_dense and len(p.shape) == 2:
+            w = dbb_prune(w, p.dbb)
+        out.append(w)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(defs, default_dtype=jnp.float32):
+    """ShapeDtypeStruct tree (no allocation) — used by the dry-run."""
+    return jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype or default_dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, Param),
+    )
+
+
+def param_pspecs(defs, rules: dict):
+    """PartitionSpec tree from logical axes via ``rules`` (axis -> mesh axis)."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec(p: Param):
+        return P(*(rules.get(a) for a in p.axes))
+
+    return jax.tree_util.tree_map(spec, defs, is_leaf=lambda x: isinstance(x, Param))
+
+
+def dbb_leaves(defs, prefix=()):
+    """Yield (path, Param) for every DBB-tagged weight."""
+    if isinstance(defs, Param):
+        if defs.dbb is not None:
+            yield prefix, defs
+        return
+    for k, v in defs.items():
+        yield from dbb_leaves(v, prefix + (k,))
+
+
+def tree_get(tree, path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def tree_set(tree, path, val):
+    if not path:
+        return val
+    out = dict(tree)
+    out[path[0]] = tree_set(tree[path[0]], path[1:], val)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sharding-constraint context
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_rules(rules: Optional[dict], mesh=None):
+    """Install logical->mesh axis rules so ``shard(x, axes)`` annotates.
+
+    With no rules installed (unit tests, single device) shard() is a no-op.
+    ``mesh`` (optional) enables shard_map-based ops (sharded embedding).
+    """
+    prev = getattr(_CTX, "rules", None)
+    prev_mesh = getattr(_CTX, "mesh", None)
+    _CTX.rules = rules
+    _CTX.mesh = mesh
+    try:
+        yield
+    finally:
+        _CTX.rules = prev
+        _CTX.mesh = prev_mesh
+
+
+def current_mesh():
+    return getattr(_CTX, "mesh", None)
+
+
+def shard(x: jax.Array, axes: tuple) -> jax.Array:
+    rules = getattr(_CTX, "rules", None)
+    if rules is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(*(rules.get(a) for a in axes))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def current_rules() -> Optional[dict]:
+    return getattr(_CTX, "rules", None)
+
+
+# ---------------------------------------------------------------------------
+# Math helpers
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * gamma.astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * gamma.astype(
+        dt
+    ) + beta.astype(dt)
+
+
+def rope(x, positions, theta=10000.0):
+    """Apply rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def apply_linear(x: jax.Array, w, bias=None) -> jax.Array:
+    """x @ w where w is a dense array or a compressed DBBWeight.
+
+    The DBBWeight path is the GSPMD-friendly einsum form of the
+    time-unrolled VDBB matmul (tc mode): one-hot "mux" gather of the
+    activations into compressed-K, then a dense contraction whose FLOPs
+    scale with nnz/bz. On TPU the Pallas kernel implements the same
+    contraction; this form is used under pjit so XLA shards it.
+    """
+    if isinstance(w, DBBWeight):
+        fmt = w.fmt
+        k, n = w.shape
+        nb = k // fmt.bz
+        lead = x.shape[:-1]
+        xb = x.reshape(*lead, nb, fmt.bz)
+        if w.indices.shape[-1] == 1:  # shared pattern (tc): compressed compute
+            onehot = jax.nn.one_hot(
+                w.indices[:, :, 0].astype(jnp.int32), fmt.bz, dtype=x.dtype
+            )  # (nb, nnz, bz)
+            ac = jnp.einsum("...bi,bji->...bj", xb, onehot)  # mux
+            y = jnp.einsum("...bj,bjn->...n", ac, w.values.astype(x.dtype))
+        else:  # per-column pattern (bw): expand then dense contract
+            from repro.core.vdbb import dbb_decode
+
+            y = x @ dbb_decode(w).astype(x.dtype)
+    else:
+        y = x @ w.astype(x.dtype)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+def linear_def(k, n, k_axis, n_axis, *, dbb=None, scale=1.0, dtype=None) -> Param:
+    """Weight matrices use 'w_embed' where activations use 'embed': the
+    weight feature dim is FSDP-sharded over 'data' (ZeRO-3) in training —
+    without it a 72B model's fp32 params+optimizer need 54 GB/chip (§Perf H3)
+    — while activations never shard their feature dim."""
+    remap = {"embed": "w_embed"}
+    return Param(
+        (k, n), (remap.get(k_axis, k_axis), remap.get(n_axis, n_axis)),
+        "scaled", scale, dtype, dbb,
+    )
+
+
+def sharded_embed_lookup(table: jax.Array, ids: jax.Array, compute_dtype) -> jax.Array:
+    """Embedding gather that stays sharded under pjit.
+
+    Plain ``jnp.take`` on a vocab-sharded table makes GSPMD all-gather the
+    full fp32 table (and all-reduce its full gradient): ~10 GB/step on a
+    150k-vocab model (§Perf H2). This version does a masked local lookup
+    per vocab shard inside shard_map and psums the (B,S,d) result in the
+    compute dtype; the table and its gradient never leave their shards.
+    """
+    rules = current_rules()
+    axis = rules.get("vocab") if rules else None
+    mesh = current_mesh()
+    if axis is None or mesh is None:
+        return jnp.take(table, ids, axis=0).astype(compute_dtype)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    dp = rules.get("batch")
+
+    def local(tbl, ids_l):
+        i = jax.lax.axis_index(axis)
+        v_loc = tbl.shape[0]
+        l = ids_l - i * v_loc
+        ok = (l >= 0) & (l < v_loc)
+        safe = jnp.clip(l, 0, v_loc - 1)
+        out = jnp.take(tbl, safe, axis=0).astype(compute_dtype)
+        out = jnp.where(ok[..., None], out, jnp.zeros((), compute_dtype))
+        return jax.lax.psum(out, axis)
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(dp, *([None] * (ids.ndim - 1)))),
+        out_specs=P(dp, *([None] * (ids.ndim - 1)), None),
+    )
+    return fn(table, ids)

@@ -1,0 +1,164 @@
+"""Unified model configuration covering all 10 assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.vdbb import DBBFormat
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | vlm | audio | ssm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # mixer selection; hybrids give a per-layer pattern that tiles num_layers
+    mixer: str = "gqa"  # gqa | mla | rwkv6
+    block_pattern: Tuple[str, ...] = ("attn",)  # attn | local | rec | rwkv
+    local_window: int = 2048
+
+    qkv_bias: bool = False
+    mlp: str = "swiglu"  # swiglu | gelu
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    rope_theta: float = 1e6
+    tie_embeddings: bool = False
+
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    moe_capacity_factor: float = 1.0
+
+    # MLA (deepseek-style)
+    q_lora_rank: int = 0  # 0 -> dense q projection
+    kv_lora_rank: int = 512
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+
+    # recurrent (RG-LRU / RWKV6)
+    d_rnn: int = 0  # 0 -> d_model
+    conv1d_width: int = 4
+    rwkv_head_dim: int = 64
+    wkv_chunk: int = 64
+
+    # modality frontends (stubs per assignment spec)
+    frontend: Optional[str] = None  # vision | audio | None
+    num_vision_tokens: int = 256
+    num_codebooks: int = 4
+    codebook_vocab: int = 2048
+    cross_attn: bool = False
+    cross_len: int = 128
+
+    # --- the paper's technique: VDBB weight sparsity ---
+    # Applied to every projection GEMM with K % bz == 0. None = dense model.
+    dbb: Optional[DBBFormat] = None
+    # serve with compressed DBBWeight leaves (bandwidth win at decode)
+    serve_compressed: bool = True
+
+    embed_scale: bool = False  # multiply embeddings by sqrt(d_model) (gemma)
+
+    # numerics / execution
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "full"  # none | full | dots
+    q_chunk: int = 1024
+    scan_layers: bool = True
+    logit_softcap: float = 0.0
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def d_rnn_(self) -> int:
+        return self.d_rnn or self.d_model
+
+    @property
+    def rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        if self.mixer == "rwkv6":
+            return ("rwkv",)
+        return self.block_pattern
+
+    @property
+    def num_groups(self) -> int:
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def tail_pattern(self) -> Tuple[str, ...]:
+        """Layers left over when the pattern doesn't tile num_layers."""
+        rem = self.num_layers % len(self.pattern)
+        return self.pattern[:rem]
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if decode state size is bounded (SSM/hybrid) — such archs
+        run the long_500k cell; pure full-attention archs skip it."""
+        kinds = set(self.pattern)
+        return "attn" not in kinds  # 'local'/'rec'/'rwkv' are all bounded
+
+    # ---- parameter count (for 6ND model-flops accounting) ----
+    def param_count(self) -> int:
+        import math
+
+        from repro.models.model import LM
+
+        import jax
+
+        defs = LM(self).defs()
+        return sum(
+            math.prod(p.shape)
+            for p in jax.tree_util.tree_leaves(
+                defs, is_leaf=lambda x: hasattr(x, "axes")
+            )
+        )
+
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (routed top_k + shared)."""
+        total = self.param_count()
+        if not self.is_moe:
+            return total
+        import math
+
+        from repro.models.model import LM
+
+        defs = LM(self).defs()
+
+        def _walk(d, path=()):
+            if hasattr(d, "axes"):
+                yield path, d
+                return
+            for k, v in d.items():
+                yield from _walk(v, path + (k,))
+
+        routed = sum(
+            math.prod(p.shape) for path, p in _walk(defs) if any("we_" in k for k in path)
+        )
+        active = total - routed + routed * self.top_k // self.num_experts
+        return active

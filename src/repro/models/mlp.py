@@ -1,0 +1,142 @@
+"""MLP blocks: dense (SwiGLU / GELU) and Mixture-of-Experts.
+
+MoE uses expert-choice dispatch (experts pick their top-C tokens), which
+keeps every tensor dense-shaped and shards cleanly with experts on the
+'model' mesh axis (EP). Capacity C = tokens * top_k / E * capacity_factor,
+so compute matches token-choice top-k routing. DESIGN.md records this
+TPU-idiomatic deviation from deepseek's token-choice router.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Param, apply_linear, linear_def, shard
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseMLP:
+    cfg: "ModelConfig"  # noqa: F821
+    d_ff: int = 0  # override (shared experts); 0 -> cfg.d_ff
+
+    @property
+    def ff(self):
+        return self.d_ff or self.cfg.d_ff
+
+    def defs(self):
+        c = self.cfg
+        d = {
+            "w_up": linear_def(c.d_model, self.ff, "embed", "mlp", dbb=c.dbb),
+            "w_down": linear_def(self.ff, c.d_model, "mlp", "embed", dbb=c.dbb),
+        }
+        if c.mlp == "swiglu":
+            d["w_gate"] = linear_def(c.d_model, self.ff, "embed", "mlp", dbb=c.dbb)
+        return d
+
+    def __call__(self, p, x):
+        c = self.cfg
+        up = apply_linear(x, p["w_up"])
+        if c.mlp == "swiglu":
+            up = jax.nn.silu(apply_linear(x, p["w_gate"])) * up
+        else:
+            up = jax.nn.gelu(up)
+        up = shard(up, ("batch", None, "mlp"))
+        return apply_linear(up, p["w_down"])
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEMLP:
+    """Routed experts (expert-choice) + optional fused shared experts."""
+
+    cfg: "ModelConfig"  # noqa: F821
+
+    def defs(self):
+        c = self.cfg
+        e, dm, ff = c.num_experts, c.d_model, c.d_ff
+        d = {
+            "router": linear_def(dm, e, "embed", None, scale=1.0),
+            "we_gate": Param((e, dm, ff), ("experts", "w_embed", None), "scaled"),
+            "we_up": Param((e, dm, ff), ("experts", "w_embed", None), "scaled"),
+            "we_down": Param((e, ff, dm), ("experts", None, "w_embed"), "scaled"),
+        }
+        if c.num_shared_experts:
+            d["shared"] = DenseMLP(c, d_ff=c.num_shared_experts * c.d_ff).defs()
+        return d
+
+    def __call__(self, p, x):
+        c = self.cfg
+        b, s, dm = x.shape
+        if s > 1:
+            y = self._grouped(p, x)
+        else:
+            y = self._global(p, x)  # decode: a handful of tokens
+        if c.num_shared_experts:
+            y = y + DenseMLP(c, d_ff=c.num_shared_experts * c.d_ff)(p["shared"], x)
+        return shard(y, ("batch", "seq", "embed"))
+
+    def _grouped(self, p, x):
+        """GShard-style grouped expert-choice: experts pick their top-C
+        tokens WITHIN each example, so the dispatch gather stays local to
+        the data shard — global routing all-gathers the full token tensor
+        (~15 GB/layer on deepseek-v3 train_4k; §Perf H4)."""
+        c = self.cfg
+        b, s, dm = x.shape
+        cap = max(1, int(s * c.top_k * c.moe_capacity_factor) // c.num_experts)
+        # leave the SP (seq-sharded) residual: dispatch gathers along seq
+        # must be shard-local (else: partial-gather + 15 GB all-reduce)
+        x = shard(x, ("batch", None, "embed"))
+        logits = apply_linear(x.astype(jnp.float32), p["router"].astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)  # (b, s, E)
+        gates, idx = jax.lax.top_k(probs.transpose(0, 2, 1), cap)  # (b, E, cap)
+        # shard the *indices* by expert before the gather so the dispatched
+        # tensor is born expert-sharded (never materialized at full E)
+        idx = shard(idx, ("batch", "experts", None))
+        gates = shard(gates, ("batch", "experts", None))
+        disp = jnp.take_along_axis(
+            x[:, None, :, :], idx[..., None], axis=2
+        )  # (b, E, cap, d)
+        disp = shard(disp, ("batch", "experts", None, None))
+        h = jnp.einsum("becd,edf->becf", disp, p["we_up"].astype(x.dtype))
+        g = jnp.einsum("becd,edf->becf", disp, p["we_gate"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+        h = shard(h, ("batch", "experts", None, None))
+        out = jnp.einsum("becf,efd->becd", h, p["we_down"].astype(x.dtype))
+        out = out * gates[..., None].astype(x.dtype)
+        # combine: one-hot-free scatter-add back to sequence positions
+        y = jnp.zeros((b, s, dm), x.dtype)
+        bidx = jnp.broadcast_to(jnp.arange(b)[:, None, None], idx.shape)
+        y = y.at[bidx.reshape(-1), idx.reshape(-1)].add(out.reshape(-1, dm))
+        return y
+
+    def _global(self, p, x):
+        c = self.cfg
+        b, s, dm = x.shape
+        t = b * s
+        xf = x.reshape(t, dm)
+        logits = apply_linear(xf.astype(jnp.float32), p["router"].astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)  # (t, E)
+        cap = max(1, int(t * c.top_k * c.moe_capacity_factor) // c.num_experts)
+        gates, idx = jax.lax.top_k(probs.T, cap)  # (E, cap)
+        disp = jnp.take(xf, idx.reshape(-1), axis=0).reshape(c.num_experts, cap, dm)
+        disp = shard(disp, ("experts", None, None))
+        h = jnp.einsum("ecd,edf->ecf", disp, p["we_up"].astype(x.dtype))
+        g = jnp.einsum("ecd,edf->ecf", disp, p["we_gate"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+        out = jnp.einsum("ecf,efd->ecd", h, p["we_down"].astype(x.dtype))
+        out = out * gates[..., None].astype(x.dtype)
+        y = jnp.zeros((t, dm), x.dtype).at[idx.reshape(-1)].add(
+            out.reshape(c.num_experts * cap, dm)
+        )
+        return y.reshape(b, s, dm)
+
+    def aux_loss(self, p, x):
+        """Load-balance auxiliary loss (mean entropy regularizer)."""
+        logits = apply_linear(
+            x.reshape(-1, x.shape[-1]).astype(jnp.float32),
+            p["router"].astype(jnp.float32),
+        )
+        probs = jax.nn.softmax(logits, -1)
+        frac = probs.mean(0)
+        return jnp.sum(frac * frac) * probs.shape[-1]

@@ -1,0 +1,298 @@
+"""Recurrent mixers: RG-LRU (RecurrentGemma/Griffin) and RWKV6 (Finch).
+
+Both are linear recurrences, implemented with parallel forms for
+train/prefill (associative scan for RG-LRU; exact chunked form for the
+RWKV6 matrix state with per-dimension data-dependent decay) and O(1)
+carried state for decode — which is why these archs run the long_500k cell.
+
+Numerical note (RWKV6 chunked): every exponent used is a *non-positive*
+cumulative log-decay difference, so exp() never overflows; underflow to 0
+is the mathematically correct limit. Computed in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Param, apply_linear, linear_def, rms_norm, shard
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block: proj -> conv1d -> RG-LRU, gated)
+# ---------------------------------------------------------------------------
+
+_C_RGLRU = 8.0  # Griffin's fixed recurrence sharpness
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUBlock:
+    cfg: "ModelConfig"  # noqa: F821
+
+    def defs(self):
+        c = self.cfg
+        dr = c.d_rnn_
+        dbb = c.dbb
+        return {
+            "w_x": linear_def(c.d_model, dr, "embed", "mlp", dbb=dbb),
+            "w_gate": linear_def(c.d_model, dr, "embed", "mlp", dbb=dbb),
+            "conv_k": Param((c.conv1d_width, dr), (None, "mlp"), "scaled"),
+            "w_a": linear_def(dr, dr, "mlp", None, dbb=dbb),  # recurrence gate
+            "w_i": linear_def(dr, dr, "mlp", None, dbb=dbb),  # input gate
+            "log_lambda": Param((dr,), (None,), "ones", scale=0.5),
+            "w_out": linear_def(dr, c.d_model, "mlp", "embed", dbb=dbb),
+        }
+
+    def _gates(self, p, u):
+        a_exp = jax.nn.sigmoid(apply_linear(u, p["w_a"]))
+        log_a = -_C_RGLRU * a_exp.astype(jnp.float32) * jax.nn.softplus(
+            p["log_lambda"].astype(jnp.float32)
+        )
+        a = jnp.exp(log_a)
+        gated_in = jax.nn.sigmoid(apply_linear(u, p["w_i"])) * u
+        beta = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12))
+        return a, (beta * gated_in.astype(jnp.float32))
+
+    def __call__(self, p, x, positions=None, memory=None):
+        """Full-sequence via associative scan. x: (B,S,d)."""
+        c = self.cfg
+        u = apply_linear(x, p["w_x"])
+        u = shard(u, ("batch", None, "mlp"))
+        u = _causal_conv1d(u, p["conv_k"])
+        a, bx = self._gates(p, u)
+        # h_t = a_t h_{t-1} + bx_t  via associative scan over time.
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+
+        _, h = jax.lax.associative_scan(comb, (a, bx), axis=1)
+        h = h.astype(x.dtype)
+        gate = jax.nn.gelu(apply_linear(x, p["w_gate"]))
+        y = apply_linear(h * gate, p["w_out"])
+        state = {
+            "h": h[:, -1].astype(jnp.float32),
+            "conv": u[:, -(c.conv1d_width - 1) :, :] if c.conv1d_width > 1 else None,
+        }
+        return y, state
+
+    def init_cache(self, batch, max_len, dtype):
+        c = self.cfg
+        dr = c.d_rnn_
+        return {
+            "h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, c.conv1d_width - 1, dr), dtype),
+        }
+
+    def decode(self, p, x, cache, pos):
+        c = self.cfg
+        u = apply_linear(x, p["w_x"])  # (B,1,dr)
+        hist = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)
+        kern = p["conv_k"].astype(u.dtype)
+        u_c = jnp.einsum("bwd,wd->bd", hist, kern)[:, None, :]
+        a, bx = self._gates(p, u_c)
+        h = a[:, 0] * cache["h"] + bx[:, 0]
+        gate = jax.nn.gelu(apply_linear(x, p["w_gate"]))
+        y = apply_linear(h[:, None, :].astype(x.dtype) * gate, p["w_out"])
+        return y, {"h": h, "conv": hist[:, 1:, :]}
+
+
+def _causal_conv1d(u, kernel):
+    """Depthwise causal conv. u: (B,S,D); kernel: (W,D)."""
+    w = kernel.shape[0]
+    pad = jnp.pad(u, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(w):
+        out = out + pad[:, i : i + u.shape[1], :].astype(jnp.float32) * kernel[i].astype(
+            jnp.float32
+        )
+    return out.astype(u.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time-mix + channel-mix
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Block:
+    cfg: "ModelConfig"  # noqa: F821
+
+    def defs(self):
+        c = self.cfg
+        dm = c.d_model
+        h, hd = c.rwkv_heads, c.rwkv_head_dim
+        dbb = c.dbb
+        lora = 64
+        tm = {
+            "mu": Param((5, dm), (None, "embed"), "zeros"),  # w,k,v,r,g ddlerp base
+            "mu_x": Param((dm,), ("embed",), "zeros"),
+            "w_r": linear_def(dm, h * hd, "embed", "heads", dbb=dbb),
+            "w_k": linear_def(dm, h * hd, "embed", "heads", dbb=dbb),
+            "w_v": linear_def(dm, h * hd, "embed", "heads", dbb=dbb),
+            "w_g": linear_def(dm, h * hd, "embed", "heads", dbb=dbb),
+            "w_o": linear_def(h * hd, dm, "heads", "embed", dbb=dbb),
+            "decay_base": Param((h * hd,), ("heads",), "normal", scale=1.0),
+            "w_decay_a": linear_def(dm, lora, "embed", None),
+            "w_decay_b": linear_def(lora, h * hd, None, "heads"),
+            "u": Param((h, hd), (None, None), "normal", scale=0.5),
+            "ln_g": Param((h * hd,), ("heads",), "ones"),
+            "ln_b": Param((h * hd,), ("heads",), "zeros"),
+        }
+        cm = {
+            "mu_k": Param((dm,), ("embed",), "zeros"),
+            "mu_r": Param((dm,), ("embed",), "zeros"),
+            "w_k": linear_def(dm, c.d_ff, "embed", "mlp", dbb=dbb),
+            "w_v": linear_def(c.d_ff, dm, "mlp", "embed", dbb=dbb),
+            "w_r": linear_def(dm, dm, "embed", None, dbb=dbb),
+        }
+        return {"tm": tm, "cm": cm}
+
+    # --------------------------------------------------------- time mix
+    def _tm_inputs(self, p, x, x_prev):
+        """ddlerp-lite: shifted mixing for w,k,v,r,g channels."""
+        xx = x_prev - x
+        mixed = x + xx * p["mu_x"].astype(x.dtype)
+        outs = []
+        for i in range(5):
+            outs.append(x + xx * (p["mu"][i].astype(x.dtype)))
+        xw, xk, xv, xr, xg = outs
+        return mixed, xw, xk, xv, xr, xg
+
+    def _decay(self, p, xw):
+        dd = apply_linear(jnp.tanh(apply_linear(xw, p["w_decay_a"])), p["w_decay_b"])
+        wlog = -jnp.exp(
+            jnp.clip(p["decay_base"].astype(jnp.float32) + dd.astype(jnp.float32), -8.0, 8.0)
+        )
+        return wlog  # (B,S,H*hd) log-decay <= 0
+
+    def time_mix(self, p, x, x_prev_tok):
+        """x: (B,S,d); x_prev_tok: (B,d) carry (last token of prev segment)."""
+        c = self.cfg
+        b, s, dm = x.shape
+        h, hd = c.rwkv_heads, c.rwkv_head_dim
+        xs = jnp.concatenate([x_prev_tok[:, None, :], x[:, :-1, :]], axis=1)
+        _, xw, xk, xv, xr, xg = self._tm_inputs(p, x, xs)
+        r = apply_linear(xr, p["w_r"]).reshape(b, s, h, hd)
+        k = apply_linear(xk, p["w_k"]).reshape(b, s, h, hd)
+        v = apply_linear(xv, p["w_v"]).reshape(b, s, h, hd)
+        g = jax.nn.silu(apply_linear(xg, p["w_g"]))
+        wlog = self._decay(p, xw).reshape(b, s, h, hd)
+        u = p["u"].astype(jnp.float32)
+        y, state = wkv_chunked(r, k, v, wlog, u, chunk=c.wkv_chunk)
+        y = y.reshape(b, s, h * hd)
+        y = _group_norm(y, p["ln_g"], p["ln_b"], h)
+        y = apply_linear(y.astype(x.dtype) * g, p["w_o"])
+        return y, {"s": state, "shift": x[:, -1, :]}
+
+    def time_mix_decode(self, p, x, cache):
+        c = self.cfg
+        b, _, dm = x.shape
+        h, hd = c.rwkv_heads, c.rwkv_head_dim
+        xs = cache["shift"][:, None, :].astype(x.dtype)
+        _, xw, xk, xv, xr, xg = self._tm_inputs(p, x, xs)
+        r = apply_linear(xr, p["w_r"]).reshape(b, h, hd).astype(jnp.float32)
+        k = apply_linear(xk, p["w_k"]).reshape(b, h, hd).astype(jnp.float32)
+        v = apply_linear(xv, p["w_v"]).reshape(b, h, hd).astype(jnp.float32)
+        g = jax.nn.silu(apply_linear(xg, p["w_g"]))
+        w = jnp.exp(self._decay(p, xw).reshape(b, h, hd))
+        u = p["u"].astype(jnp.float32)
+        s0 = cache["s"]  # (B,H,hd,hd) fp32
+        kv = k[..., :, None] * v[..., None, :]  # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r, s0 + u[None, :, :, None] * kv)
+        s1 = w[..., :, None] * s0 + kv
+        y = y.reshape(b, 1, h * hd)
+        y = _group_norm(y, p["ln_g"], p["ln_b"], h)
+        y = apply_linear(y.astype(x.dtype) * g, p["w_o"])
+        return y, {"s": s1, "shift": x[:, -1, :]}
+
+    # ------------------------------------------------------ channel mix
+    def channel_mix(self, p, x, x_prev_tok):
+        xs = jnp.concatenate([x_prev_tok[:, None, :], x[:, :-1, :]], axis=1)
+        return self._cm(p, x, xs), x[:, -1, :]
+
+    def channel_mix_decode(self, p, x, shift):
+        return self._cm(p, x, shift[:, None, :].astype(x.dtype)), x[:, -1, :]
+
+    def _cm(self, p, x, xs):
+        xx = xs - x
+        xk = x + xx * p["mu_k"].astype(x.dtype)
+        xr = x + xx * p["mu_r"].astype(x.dtype)
+        k = jnp.square(jax.nn.relu(apply_linear(xk, p["w_k"])))
+        k = shard(k, ("batch", None, "mlp"))
+        return jax.nn.sigmoid(apply_linear(xr, p["w_r"])) * apply_linear(k, p["w_v"])
+
+    # ----------------------------------------------------------- caches
+    def init_cache(self, batch, max_len, dtype):
+        c = self.cfg
+        h, hd = c.rwkv_heads, c.rwkv_head_dim
+        return {
+            "s": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "shift": jnp.zeros((batch, c.d_model), dtype),
+            "cm_shift": jnp.zeros((batch, c.d_model), dtype),
+        }
+
+
+def _group_norm(y, gamma, beta, groups):
+    b, s, d = y.shape
+    yg = y.reshape(b, s, groups, d // groups).astype(jnp.float32)
+    mu = yg.mean(-1, keepdims=True)
+    var = yg.var(-1, keepdims=True)
+    yn = ((yg - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, d)
+    return yn * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+
+
+def wkv_chunked(r, k, v, wlog, u, *, chunk=64):
+    """Exact chunked RWKV6 WKV with per-dim data-dependent decay.
+
+    r,k,v: (B,S,H,D); wlog: (B,S,H,D) log-decay (<=0); u: (H,D) bonus.
+    Returns y: (B,S,H,D) fp32 and final state (B,H,D,D) fp32.
+
+    Recurrence: S_t = diag(w_t) S_{t-1} + k_t v_t^T;
+                y_t = r_t^T S_{t-1} + (r_t . (u*k_t)) v_t.
+    All chunk exponents are <= 0 (see module docstring).
+    """
+    b, s, h, d = r.shape
+    t = min(chunk, s)
+    s_orig = s
+    if s % t:  # pad tail: wlog=0 (decay 1) and k=0 leave the state untouched
+        pad = t - s % t
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, wlog = zpad(r), zpad(k), zpad(v), zpad(wlog)
+        s = s + pad
+    n = s // t
+    f32 = jnp.float32
+
+    def resh(x):
+        return x.astype(f32).reshape(b, n, t, h, d).transpose(1, 0, 3, 2, 4)
+
+    rr, kk, vv, ww = map(resh, (r, k, v, wlog))  # (n,B,H,T,D)
+
+    def body(S, inp):
+        rc, kc, vc, wc = inp  # (B,H,T,D)
+        L = jnp.cumsum(wc, axis=2)  # inclusive cumulative log decay
+        Lx = L - wc  # exclusive
+        # inter-chunk: y_inter[t] = (r_t * exp(Lx_t)) @ S
+        r_t = rc * jnp.exp(Lx)
+        y_inter = jnp.einsum("bhtk,bhkv->bhtv", r_t, S)
+        # intra-chunk: D[t,i,d] = exp(Lx_t - L_i) for i < t  (<= 0 exponent)
+        expo = Lx[:, :, :, None, :] - L[:, :, None, :, :]  # (B,H,T,T,D)
+        tri = (jnp.arange(t)[:, None] > jnp.arange(t)[None, :])[None, None, :, :, None]
+        dec = jnp.where(tri, jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+        a = jnp.einsum("bhtd,bhid,bhtid->bhti", rc, kc, dec)
+        y_intra = jnp.einsum("bhti,bhiv->bhtv", a, vc)
+        # bonus diagonal term
+        y_bonus = jnp.einsum("bhtd,bhtd->bht", rc, u[None, :, None, :] * kc)[
+            ..., None
+        ] * vc
+        # state update: S' = diag(exp(L_T)) S + sum_i (k_i * exp(L_T - L_i)) v_i^T
+        last = L[:, :, -1:, :]
+        k_t = kc * jnp.exp(last - L)
+        S = jnp.exp(last[:, :, 0, :])[..., None] * S + jnp.einsum(
+            "bhtk,bhtv->bhkv", k_t, vc
+        )
+        return S, y_inter + y_intra + y_bonus
+
+    S0 = jnp.zeros((b, h, d, d), f32)
+    S, ys = jax.lax.scan(body, S0, (rr, kk, vv, ww))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, d)
+    return y[:, :s_orig], S

@@ -1,0 +1,125 @@
+"""AdamW + cosine schedule + global-norm clipping + optional int8
+error-feedback gradient compression — pure-pytree, pjit-friendly.
+
+The compression hook mirrors the paper's theme (compress right before the
+expensive wire): DP gradient all-reduce bytes shrink 4x (fp32->int8) with
+an error-feedback residual keeping convergence. Under pjit the all-reduce
+is emitted by XLA inside autodiff, so the quantize/dequantize pair brackets
+the optimizer boundary; the shard_map variant in train/loop.py places it
+on the wire explicitly for the small-mesh integration test.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    grad_compression: bool = False  # int8 + error feedback
+
+
+def schedule(step, cfg: OptConfig):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_state(params, cfg: OptConfig):
+    zeros = lambda p: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p
+    )
+    st = {"m": zeros(params), "v": zeros(params), "count": jnp.zeros((), jnp.int32)}
+    if cfg.grad_compression:
+        st["ef"] = zeros(params)  # error-feedback residual
+    # Mixed precision: when params live in bf16 (so FSDP all-gathers move
+    # half the bytes), the fp32 master copy lives HERE, fully sharded and
+    # never gathered (§Perf H3b).
+    if any(x.dtype != jnp.float32 for x in jax.tree_util.tree_leaves(params)):
+        st["master"] = jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.float32), params
+        )
+    return st
+
+
+def _global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def _compress_ef(g, ef):
+    """int8 quantize with error feedback. Returns (dequantized g, new ef)."""
+    t = g.astype(jnp.float32) + ef
+    scale = jnp.maximum(jnp.max(jnp.abs(t)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(t / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, t - deq
+
+
+def apply_updates(params, grads, state, step, cfg: OptConfig):
+    """One AdamW step. Returns (params, state, metrics)."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32) * scale, grads)
+    if cfg.grad_compression:
+        pairs = jax.tree_util.tree_map(_compress_ef, grads, state["ef"])
+        grads = jax.tree_util.tree_map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree_util.tree_map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    lr = schedule(step, cfg)
+    cnt = state["count"] + 1
+    b1c = 1 - cfg.b1 ** cnt.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** cnt.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m2 / b1c
+        vh = v2 / b2c
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps)
+        ref = master if master is not None else p.astype(jnp.float32)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step_ = step_ + cfg.weight_decay * ref
+        new_master = ref - lr * step_
+        return new_master.astype(p.dtype), m2, v2, new_master
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    flat_ma = (
+        jax.tree_util.tree_leaves(state["master"])
+        if "master" in state
+        else [None] * len(flat_p)
+    )
+    out = [
+        upd(p, g, m, v, ma)
+        for p, g, m, v, ma in zip(flat_p, flat_g, flat_m, flat_v, flat_ma)
+    ]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "count": cnt}
+    if "master" in state:
+        new_state["master"] = jax.tree_util.tree_unflatten(tdef, [o[3] for o in out])
+    if cfg.grad_compression:
+        new_state["ef"] = new_ef
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

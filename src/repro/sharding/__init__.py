@@ -1,0 +1,1 @@
+from repro.sharding.rules import attn_mode, data_pspec, make_rules  # noqa: F401

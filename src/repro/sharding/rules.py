@@ -1,0 +1,87 @@
+"""Logical-axis -> mesh-axis rules, derived per architecture.
+
+Axes (see models/common.py):
+  batch     -> DP over ('pod','data') / ('data',)
+  seq       -> 'model' (sequence-parallel residual stream; bounds remat-saved
+               activations at scale)
+  act_seq   -> block-internal sequence: 'model' only in context-parallel
+               attention mode (neither kv nor q heads divisible by TP)
+  heads/kv  -> 'model' when divisible by TP
+  mlp/experts/vocab -> 'model'
+  cache_seq -> decode KV-cache seq: 'model' when heads can't shard
+
+Selection (recorded per arch in EXPERIMENTS.md SDry-run):
+  kv_heads %% tp == 0  -> classic head-sharded TP (kv+q heads on 'model')
+  num_heads %% tp == 0 -> q-head-sharded TP, KV replicated across 'model'
+  otherwise            -> context parallelism (shard q sequence)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.models.config import ModelConfig
+
+
+def attn_mode(cfg: ModelConfig, tp: int) -> str:
+    if cfg.mixer == "rwkv6":
+        return "feature"  # projections TP'd as features; WKV data-parallel
+    if cfg.mixer == "mla":
+        return "kv_sharded" if cfg.num_heads % tp == 0 else "context"
+    if cfg.num_kv_heads % tp == 0:
+        return "kv_sharded"
+    if cfg.num_heads % tp == 0:
+        return "q_sharded"
+    return "context"
+
+
+def make_rules(
+    cfg: ModelConfig,
+    *,
+    tp: int = 16,
+    multi_pod: bool = False,
+    mode: str = "train",  # train | prefill | decode
+) -> dict:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    am = attn_mode(cfg, tp)
+    rules = {
+        "batch": dp,
+        "embed": None,
+        # ZeRO-3/FSDP: weight feature dims shard over 'data' during training
+        # (params+optimizer fully sharded: TP x FSDP); serving keeps weights
+        # replicated across 'data' for per-step latency.
+        "w_embed": "data" if mode == "train" else None,
+        "layers": None,
+        "vocab": "model",
+        "mlp": "model",
+        "experts": "model",
+        "seq": "model" if mode != "decode" else None,
+        "act_seq": None,
+        "heads": None,
+        "kv": None,
+        "cache_seq": None,
+    }
+    if am in ("kv_sharded", "feature"):
+        rules["heads"] = "model"
+        rules["kv"] = "model" if am == "kv_sharded" else None
+    elif am == "q_sharded":
+        rules["heads"] = "model"
+    else:  # context parallel
+        rules["act_seq"] = "model" if mode != "decode" else None
+    if mode == "decode":
+        # cache layout: shard kv heads when possible, else the cache seq dim
+        if am in ("kv_sharded",) and cfg.mixer != "mla":
+            rules["cache_seq"] = None
+        elif cfg.mixer == "mla":
+            rules["cache_seq"] = None  # latent cache is head-free; replicate
+        elif am == "q_sharded":
+            rules["cache_seq"] = None  # KV replicated (few kv heads, cheap)
+        else:
+            rules["cache_seq"] = "model"
+        # MoE decode: tiny token count; keep experts sharded
+    return rules
+
+
+def data_pspec(rules):
+    from jax.sharding import PartitionSpec as P
+
+    return P(rules["batch"])

@@ -1,0 +1,121 @@
+"""Fault-tolerant training loop.
+
+- auto-resume: restores the latest atomic checkpoint (params + optimizer +
+  data step) on start; a killed/preempted job relaunches and continues.
+- preemption: SIGTERM/SIGINT trigger a final synchronous checkpoint before
+  exit (the cluster analogue of a maintenance-event handler).
+- async checkpointing overlaps persistence with training; the data pipeline
+  prefetches on a host thread (straggler hiding).
+- elastic: restore() reshard-on-load via target shardings, so the same
+  checkpoint resumes on a different mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+from repro.core.sparse_linear import PruneSchedule
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticTokens
+from repro.models.model import LM
+from repro.optim.adamw import OptConfig, init_state
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    keep: int = 3
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: LM,
+        opt_cfg: OptConfig,
+        data_cfg: DataConfig,
+        loop_cfg: LoopConfig,
+        prune_schedule: Optional[PruneSchedule] = None,
+        jit_kwargs: Optional[dict] = None,
+    ):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.data_cfg = data_cfg
+        self.loop = loop_cfg
+        self.source = SyntheticTokens(model.cfg, data_cfg)
+        self.step_fn = jax.jit(
+            make_train_step(model, opt_cfg, prune_schedule), **(jit_kwargs or {})
+        )
+        self.ckpt = (
+            store.AsyncCheckpointer(loop_cfg.ckpt_dir, keep=loop_cfg.keep)
+            if loop_cfg.ckpt_dir
+            else None
+        )
+        self._preempted = False
+
+    # ------------------------------------------------------------------
+    def init_or_resume(self, key=None):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        params = self.model.init(key)
+        if self.model.cfg.dbb is not None:
+            params = self.model.constrain(params)
+        opt_state = init_state(params, self.opt_cfg)
+        start = 0
+        if self.loop.ckpt_dir and store.latest_step(self.loop.ckpt_dir) is not None:
+            (params, opt_state), manifest = store.restore(
+                self.loop.ckpt_dir, (params, opt_state)
+            )
+            start = manifest["step"] + 1
+            print(f"[resume] from step {manifest['step']}")
+        return params, opt_state, start
+
+    def _install_signal_handlers(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:
+                pass  # non-main thread (tests)
+
+    # ------------------------------------------------------------------
+    def run(self, params=None, opt_state=None, start_step=None, key=None):
+        if params is None:
+            params, opt_state, start_step = self.init_or_resume(key)
+        self._install_signal_handlers()
+        pf = Prefetcher(self.source, start_step=start_step)
+        history = []
+        t0 = time.time()
+        try:
+            for _ in range(start_step, self.loop.total_steps):
+                step, batch = pf.next()
+                params, opt_state, metrics = self.step_fn(
+                    params, opt_state, batch, jnp.int32(step)
+                )
+                if step % self.loop.log_every == 0 or step == self.loop.total_steps - 1:
+                    loss = float(metrics["loss"])
+                    history.append((step, loss))
+                    rate = (step - start_step + 1) / (time.time() - t0)
+                    print(f"step {step:6d} loss {loss:.4f} ({rate:.2f} it/s)", flush=True)
+                if self.ckpt and (
+                    (step > 0 and step % self.loop.ckpt_every == 0) or self._preempted
+                ):
+                    self.ckpt.save_async(step, (params, opt_state))
+                if self._preempted:
+                    print(f"[preempt] flushed checkpoint at step {step}; exiting")
+                    break
+        finally:
+            pf.stop()
+            if self.ckpt:
+                self.ckpt.wait()
+        return params, opt_state, history

@@ -1,0 +1,52 @@
+"""Step functions lowered by the launcher and the dry-run.
+
+train_step:  loss -> grads -> AdamW -> DBB constraint projection (the
+             paper's magnitude pruning, applied as projected SGD).
+prefill:     full-sequence forward returning (last-token logits, cache).
+serve_step:  one-token decode against a KV cache, with compressed (VDBB)
+             weights when cfg.serve_compressed.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_linear import PruneSchedule
+from repro.models.model import LM
+from repro.optim.adamw import OptConfig, apply_updates
+
+
+def make_train_step(model: LM, opt_cfg: OptConfig, schedule: Optional[PruneSchedule] = None):
+    def train_step(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch
+        )
+        params, opt_state, opt_metrics = apply_updates(
+            params, grads, opt_state, step, opt_cfg
+        )
+        # The paper's technique: project weights back onto the DBB bound
+        # (magnitude pruning within each block), optionally annealed.
+        if model.cfg.dbb is not None:
+            params = model.constrain(params, step, schedule)
+        metrics = {**metrics, **opt_metrics, "step": step}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill(model: LM):
+    def prefill(params, batch):
+        logits, cache = model.forward(params, batch, return_cache=True)
+        return logits[:, -1:, :], cache
+
+    return prefill
+
+
+def make_serve_step(model: LM):
+    def serve_step(params, cache, batch, pos):
+        return model.decode_step(params, cache, batch, pos)
+
+    return serve_step

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.vdbb import DBBFormat, dbb_encode, dbb_gemm_costs
 from repro.models.common import apply_linear
+from repro.xla_utils import cost_analysis_dict
 
 
 def run(report):
@@ -37,7 +38,7 @@ def run(report):
         dw = dbb_encode(w, fmt, prune=True)
         fn = jax.jit(lambda a, dw: apply_linear(a, dw))
         fn(a, dw).block_until_ready()
-        c = fn.lower(a, dw).compile().cost_analysis()
+        c = cost_analysis_dict(fn.lower(a, dw).compile())
         t0 = time.time()
         for _ in range(5):
             fn(a, dw).block_until_ready()

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.core.energy_model import STAConfig, fmt_for_sparsity
 from repro.core.vdbb import DBBFormat, dbb_encode
+from repro.xla_utils import cost_analysis_dict
 
 DESIGNS = {
     "SA+CG": STAConfig(1, 1, 1, 32, 64, mode="dense", im2col=True),
@@ -43,7 +44,7 @@ def kernel_flops_scaling():
         fmt = DBBFormat(8, nnz, "matrix")
         dw = dbb_encode(w, fmt, prune=True)
         c = jax.jit(apply_linear).lower(a, dw).compile()
-        out[nnz] = c.cost_analysis()["flops"]
+        out[nnz] = cost_analysis_dict(c)["flops"]
     out["dense_equiv"] = 2 * m * k * n
     return out
 

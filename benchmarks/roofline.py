@@ -131,7 +131,110 @@ def render_md(rows) -> str:
     return "".join(lines)
 
 
+# ---------------------------------------------------------------------------
+# Conv workloads (the paper's native CNN inference path)
+# ---------------------------------------------------------------------------
+
+
+def conv_roofline_row(n, h, w, c, f, kh, kw, fmt, *, stride=1, dtype_bytes=1,
+                      im2col_unit=True) -> dict:
+    """Per-layer TPU roofline terms for the fused IM2COL × VDBB conv.
+
+    compute_s uses *executed* FLOPs (nnz/bz occupancy for tc-mode group
+    sharing); memory_s uses compressed weight bytes + the raw (im2col_unit)
+    or expanded activation stream — the two effects the fused kernel
+    composes. ``bound_reduction`` is the step-time bound vs the dense,
+    pre-expanded baseline.
+    """
+    from repro.core.vdbb import DBBFormat, dbb_conv_costs
+
+    bits = dtype_bytes * 8
+    costs = dbb_conv_costs(n, h, w, c, f, kh, kw, fmt, stride=stride, bits=bits,
+                           im2col_unit=im2col_unit)
+    dense = dbb_conv_costs(n, h, w, c, f, kh, kw, DBBFormat(fmt.bz, fmt.bz),
+                           stride=stride, bits=bits, im2col_unit=False)
+
+    def terms(cc, use_executed, dense_weights=False):
+        macs = cc["executed_macs"] if use_executed else cc["dense_macs"]
+        t_c = 2 * macs / TPU_V5E["peak_bf16_flops"]
+        wb = cc["dense_weight_bytes"] if dense_weights else cc["weight_bytes"]
+        t_m = (cc["act_bytes"] + wb + cc["out_bytes"]) / TPU_V5E["hbm_bw"]
+        return t_c, t_m
+
+    # tc mode shrinks compute; bw mode keeps it dense (per-column patterns).
+    executed = fmt.group_size(f) == f
+    t_c, t_m = terms(costs, executed)
+    # baseline streams the true dense weights, not the nnz=bz DBB container
+    # (which still carries the bz-bit mask per block).
+    d_c, d_m = terms(dense, False, dense_weights=True)
+    return dict(
+        shape=dict(n=n, h=h, w=w, c=c, f=f, kh=kh, kw=kw, stride=stride),
+        compute_s=t_c,
+        memory_s=t_m,
+        dominant="compute" if t_c >= t_m else "memory",
+        step_time_bound_s=max(t_c, t_m),
+        dense_bound_s=max(d_c, d_m),
+        bound_reduction=max(d_c, d_m) / max(t_c, t_m),
+        im2col_magnification=costs["im2col_magnification"],
+        weight_compression=costs["weight_compression"],
+        speedup=costs["speedup"],
+    )
+
+
+def conv_table(arch: str = "sparse-cnn-s", sparsity: float = 0.625, batch: int = 8):
+    """Roofline rows for every conv layer of a registered CNN config."""
+    from repro.configs import get_cnn_config
+    from repro.core.sparse_conv import DBBConv2d
+    from repro.models.cnn import SparseCNN
+
+    cfg = get_cnn_config(arch, sparsity=sparsity)
+    model = SparseCNN(cfg)
+    h = w = cfg.image_size
+    rows = []
+    for i, layer in enumerate(model.layers()):
+        if not isinstance(layer, DBBConv2d):
+            continue
+        rows.append(
+            dict(
+                layer=f"l{i}",
+                fmt=f"{layer.fmt.nnz}/{layer.fmt.bz}",
+                **conv_roofline_row(
+                    batch, h, w, layer.in_channels, layer.out_channels,
+                    layer.kh, layer.kw, layer.fmt, stride=layer.stride,
+                ),
+            )
+        )
+        h, w = layer.out_hw(h, w)
+    return cfg, rows
+
+
+def render_conv_md(arch, rows) -> str:
+    hdr = (
+        f"## Conv roofline — {arch}\n\n"
+        "| layer | fmt | compute s | memory s | dominant | bound vs dense | "
+        "im2col mag | w compress |\n|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['layer']} | {r['fmt']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| **{r['dominant']}** | {r['bound_reduction']:.2f}x "
+            f"| {r['im2col_magnification']:.2f}x | {r['weight_compression']:.2f}x |\n"
+        )
+    return "".join(lines)
+
+
 def run(report):
+    cfg, conv_rows = conv_table()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "roofline_conv.md").write_text(render_conv_md(cfg.name, conv_rows))
+    total = sum(r["step_time_bound_s"] for r in conv_rows)
+    dense_total = sum(r["dense_bound_s"] for r in conv_rows)
+    report(
+        f"roofline/conv/{cfg.name}", total * 1e6,
+        f"{len(conv_rows)} conv layers, {dense_total / total:.2f}x bound reduction "
+        "vs dense+pre-expanded -> results/roofline_conv.md",
+    )
     rows = table(multi_pod=False)
     ok = [r for r in rows if r["status"] == "ok" and r.get("terms")]
     skip = [r for r in rows if r["status"] == "skipped"]

@@ -19,6 +19,7 @@ BENCHES = [
     ("sparsity_scaling (Fig 12)", "benchmarks.bench_sparsity_scaling"),
     ("dbb_pruning (Table I/II)", "benchmarks.bench_dbb_pruning"),
     ("im2col (IM2COL unit, Fig 8)", "benchmarks.bench_im2col"),
+    ("sparse_conv (IM2COL x VDBB fused)", "benchmarks.bench_sparse_conv"),
     ("kernels (VDBB matmul)", "benchmarks.bench_kernels"),
     ("roofline (EXPERIMENTS §Roofline)", "benchmarks.roofline"),
 ]

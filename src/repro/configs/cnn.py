@@ -1,0 +1,63 @@
+"""CNN inference configs — the paper's native workload, registered
+alongside the LM archs (same sparsity knob, same DBB defaults).
+
+``sparsity`` maps to the paper's nominal formats exactly like the LM
+registry: 0.625 → 3/8 DBB. ``pattern='matrix'`` (tc kernel mode) is the
+TPU co-design default; pass ``pattern=None`` for the paper-faithful
+per-column patterns (bw kernel mode). See DESIGN.md §2/§6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax.numpy as jnp
+
+from repro.core.vdbb import DBBFormat
+from repro.models.cnn import CNNConfig
+
+
+def _dbb(sparsity: Optional[Union[str, float]], pattern="matrix") -> Optional[DBBFormat]:
+    if sparsity in (None, "dense", 0.0):
+        return None
+    if isinstance(sparsity, str):
+        sparsity = float(sparsity)
+    nnz = max(1, min(8, round((1.0 - sparsity) * 8)))
+    return DBBFormat(8, nnz, pattern)
+
+
+def sparse_cnn_tiny(sparsity=0.625, pattern="matrix") -> CNNConfig:
+    """CIFAR-scale smoke model: 6 convs, 32×32×3 input."""
+    return CNNConfig(
+        name="sparse-cnn-tiny", in_channels=3, image_size=32,
+        stage_channels=(32, 64, 128), convs_per_stage=2, num_classes=10,
+        dbb=_dbb(sparsity, pattern), dtype=jnp.float32,
+    )
+
+
+def sparse_cnn_s(sparsity=0.625, pattern="matrix") -> CNNConfig:
+    """ImageNet-tile-scale: 8 convs, 64×64×3 input, VGG-ish widths."""
+    return CNNConfig(
+        name="sparse-cnn-s", in_channels=3, image_size=64,
+        stage_channels=(64, 128, 256, 512), convs_per_stage=2, num_classes=1000,
+        dbb=_dbb(sparsity, pattern), dtype=jnp.float32,
+    )
+
+
+CNN_ARCHS = {
+    "sparse-cnn-tiny": sparse_cnn_tiny,
+    "sparse-cnn-s": sparse_cnn_s,
+}
+
+
+def get_cnn_config(name: str, sparsity=0.625, pattern="matrix") -> CNNConfig:
+    return CNN_ARCHS[name](sparsity=sparsity, pattern=pattern)
+
+
+def smoke_cnn_config(name: str, sparsity=0.625, pattern="matrix") -> CNNConfig:
+    """Reduced CPU-runnable variant of the same family."""
+    cfg = get_cnn_config(name, sparsity=sparsity, pattern=pattern)
+    return dataclasses.replace(
+        cfg, image_size=16, stage_channels=tuple(cfg.stage_channels[:2]),
+        convs_per_stage=1, num_classes=min(cfg.num_classes, 10),
+    )

@@ -3,8 +3,11 @@ from repro.core.vdbb import (  # noqa: F401
     DBBFormat,
     DBBWeight,
     DENSE,
+    dbb_conv_costs,
     dbb_decode,
+    dbb_decode_conv,
     dbb_encode,
+    dbb_encode_conv,
     dbb_gemm_costs,
     dbb_mask,
     dbb_matmul_gather_ref,
@@ -13,11 +16,13 @@ from repro.core.vdbb import (  # noqa: F401
     satisfies_dbb,
 )
 from repro.core.sparse_linear import DBBLinear, PruneSchedule  # noqa: F401
+from repro.core.sparse_conv import DBBConv2d  # noqa: F401
 from repro.core.energy_model import (  # noqa: F401
     PARETO_DESIGN,
     PAPER_TABLE_V_16NM,
     PAPER_TABLE_V_65NM,
     STAConfig,
     TPU_V5E,
+    conv_workload,
     fmt_for_sparsity,
 )

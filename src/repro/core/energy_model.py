@@ -255,6 +255,36 @@ PAPER_TABLE_V_65NM = {0.75: (2.80, 0.26), 0.625: (1.95, 0.17)}
 
 PARETO_DESIGN = STAConfig(A=4, B=8, C=8, M=4, N=8, mode="vdbb", im2col=True)
 
+
+def conv_workload(design: STAConfig, costs: dict, fmt: DBBFormat,
+                  act_sparsity: float = 0.5) -> dict:
+    """Map one conv layer (``dbb_conv_costs`` dict) onto an STA design point.
+
+    Cycles follow the time-unrolled occupancy (executed MACs over the
+    array's MAC-equivalents per cycle); energy is power × time at the
+    design's calibrated operating point. The activation stream uses the
+    raw-tile bytes when the design has the IM2COL unit and the expanded
+    im2col bytes otherwise — the two placements of Fig 8.
+    """
+    t = TECH[design.tech]
+    act_bytes = costs["act_bytes_raw"] if design.im2col else costs["act_bytes_expanded"]
+    wbytes = costs["weight_bytes"] if design.mode != "dense" else costs["dense_weight_bytes"]
+    # mode-aware occupancy: a dense SA runs all dense MACs; fixed DBB is
+    # capped at its design point; only VDBB tracks the model's nnz/bz
+    # (same dispatch as speedup()/effective_tops()).
+    cycles = costs["dense_macs"] / max(design.total_macs * design.speedup(fmt), 1)
+    time_s = cycles / (t["freq_ghz"] * 1e9)
+    power_w = design.power_mw(fmt, act_sparsity) / 1e3
+    return dict(
+        cycles=cycles,
+        time_s=time_s,
+        energy_j=power_w * time_s,
+        act_bytes=int(act_bytes),
+        weight_bytes=int(wbytes),
+        sram_reads_saved=costs["im2col_magnification"] if design.im2col else 1.0,
+        effective_tops=costs["effective_ops"] / max(time_s, 1e-30) / 1e12,
+    )
+
 # TPU v5e roofline constants (used by benchmarks/roofline.py; kept here so
 # the energy model and the roofline report share one source of truth).
 TPU_V5E = dict(

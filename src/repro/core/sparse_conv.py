@@ -1,0 +1,149 @@
+"""DBBConv2d — the paper's technique on its native workload, CNN layers.
+
+Mirrors :class:`repro.core.sparse_linear.DBBLinear` end-to-end:
+
+Training: the dense (kh, kw, C, F) weight is kept *projected* onto the DBB
+constraint along K = kh·kw·C (magnitude top-nnz per bz-block) by
+``constrain()``, with the same progressive nnz anneal.
+
+Serving: ``compress_params()`` converts to the compressed DBBWeight layout;
+the forward pass then runs the fused IM2COL × VDBB conv — Pallas kernel in
+``kernel_mode='pallas'`` (kernels/vdbb_im2col_conv), decode + XLA conv as
+the reference path — consuming nnz/bz of the dense weight bandwidth while
+reading the raw (un-im2col'd) activation tile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_linear import PruneSchedule
+from repro.core.vdbb import (
+    DBBFormat,
+    DBBWeight,
+    DENSE,
+    dbb_decode_conv,
+    dbb_encode_conv,
+    dbb_prune,
+)
+from repro.kernels.core import _pair  # stride/kernel-size normalizer (no cycle:
+                                      # kernels.core has no repro-internal imports)
+
+
+@dataclasses.dataclass(frozen=True)
+class DBBConv2d:
+    """y = conv2d(x, W) (+ b); x NHWC, W (kh, kw, C, F), DBB along K=kh·kw·C."""
+
+    in_channels: int
+    out_channels: int
+    kernel_size: Any = 3  # int or (kh, kw)
+    stride: Any = 1
+    padding: Any = "SAME"
+    fmt: DBBFormat = DENSE
+    use_bias: bool = False
+    dtype: Any = jnp.float32
+    kernel_mode: str = "ref"  # 'ref' | 'pallas' (serving path choice)
+
+    def __post_init__(self):
+        if not self.fmt.is_dense and self.in_channels % self.fmt.bz != 0:
+            raise ValueError(
+                f"in_channels={self.in_channels} not divisible by bz="
+                f"{self.fmt.bz}: DBB blocks must not straddle kernel taps"
+            )
+
+    @property
+    def kh(self) -> int:
+        return _pair(self.kernel_size)[0]
+
+    @property
+    def kw(self) -> int:
+        return _pair(self.kernel_size)[1]
+
+    def init(self, key) -> dict:
+        kh, kw = self.kh, self.kw
+        fan_in = kh * kw * self.in_channels
+        scale = 1.0 / (fan_in**0.5)
+        w = scale * jax.random.truncated_normal(
+            key, -2, 2, (kh, kw, self.in_channels, self.out_channels), self.dtype
+        )
+        if not self.fmt.is_dense:
+            w = self._project(w, self.fmt)
+        p = {"w": w}
+        if self.use_bias:
+            p["b"] = jnp.zeros((self.out_channels,), self.dtype)
+        return p
+
+    # ------------------------------------------------------------------
+    def _project(self, w4: jax.Array, fmt: DBBFormat) -> jax.Array:
+        kh, kw, c, f = w4.shape
+        return dbb_prune(w4.reshape(kh * kw * c, f), fmt).reshape(w4.shape)
+
+    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
+        w = params["w"]
+        if isinstance(w, DBBWeight):
+            y = self._compressed_conv(x, w)
+        else:
+            y = jax.lax.conv_general_dilated(
+                x,
+                w.astype(x.dtype),
+                window_strides=_pair(self.stride),
+                padding=self.padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+        if self.use_bias:
+            y = y + params["b"].astype(y.dtype)
+        return y
+
+    def _compressed_conv(self, x: jax.Array, w: DBBWeight) -> jax.Array:
+        if self.kernel_mode == "pallas":
+            from repro.kernels import ops  # deferred: kernels are optional
+
+            return ops.sparse_conv(
+                x, w, self.kh, self.kw, stride=_pair(self.stride), padding=self.padding
+            )
+        w4 = dbb_decode_conv(w, self.kh, self.kw).astype(x.dtype)
+        return jax.lax.conv_general_dilated(
+            x,
+            w4,
+            window_strides=_pair(self.stride),
+            padding=self.padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+
+    # ------------------------------------------------------------------
+    def constrain(self, params: dict, step=None, schedule: Optional[PruneSchedule] = None) -> dict:
+        """Project the dense weight onto the (possibly annealed) constraint."""
+        if self.fmt.is_dense or isinstance(params["w"], DBBWeight):
+            return params
+        if schedule is None or step is None:
+            w = self._project(params["w"], self.fmt)
+        else:
+            cur = schedule.nnz_at(step, self.fmt)
+            branches = [
+                lambda w, n=n: self._project(w, dataclasses.replace(self.fmt, nnz=n))
+                for n in range(self.fmt.nnz, self.fmt.bz + 1)
+            ]
+            w = jax.lax.switch(cur - self.fmt.nnz, branches, params["w"])
+        return dict(params, w=w)
+
+    def compress_params(self, params: dict) -> dict:
+        if self.fmt.is_dense:
+            return params
+        return dict(params, w=dbb_encode_conv(params["w"], self.fmt, prune=True))
+
+    # ------------------------------------------------------------------
+    def out_hw(self, h: int, w: int) -> tuple:
+        from repro.kernels.core import conv_geometry
+
+        _, _, (ho, wo) = conv_geometry(h, w, self.kh, self.kw, self.stride, self.padding)
+        return ho, wo
+
+    def flops(self, batch: int, h: int, w: int) -> int:
+        """Executed MACs*2 under the time-unrolled occupancy model."""
+        ho, wo = self.out_hw(h, w)
+        k = self.kh * self.kw * self.in_channels
+        k_eff = (k // self.fmt.bz) * self.fmt.nnz
+        return 2 * batch * ho * wo * k_eff * self.out_channels

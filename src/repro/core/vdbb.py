@@ -226,6 +226,22 @@ def dbb_decode(dw: DBBWeight) -> jax.Array:
     return dense.reshape(k, n)
 
 
+def dbb_encode_conv(w: jax.Array, fmt: DBBFormat, *, prune: bool = False) -> DBBWeight:
+    """Compress a conv weight (kh, kw, C, F) along K = kh·kw·C.
+
+    With C % bz == 0 every DBB block lies inside a single kernel tap, which
+    is what the fused IM2COL × VDBB kernel streams (kernels/vdbb_im2col_conv).
+    """
+    kh, kw, c, f = w.shape
+    return dbb_encode(w.reshape(kh * kw * c, f), fmt, prune=prune)
+
+
+def dbb_decode_conv(dw: DBBWeight, kh: int, kw: int) -> jax.Array:
+    """Expand a compressed conv weight back to dense (kh, kw, C, F)."""
+    k, f = dw.shape
+    return dbb_decode(dw).reshape(kh, kw, k // (kh * kw), f)
+
+
 # ---------------------------------------------------------------------------
 # Reference sparse matmuls (pure jnp oracles; kernels/ref.py re-exports)
 # ---------------------------------------------------------------------------
@@ -289,3 +305,55 @@ def dbb_gemm_costs(m: int, k: int, n: int, fmt: DBBFormat, bits: int = 8) -> dic
         out_bytes=int(obytes),
         weight_compression=fmt.compression_ratio(bits),
     )
+
+
+def dbb_conv_costs(
+    n: int,
+    h: int,
+    w: int,
+    c: int,
+    f: int,
+    kh: int,
+    kw: int,
+    fmt: DBBFormat,
+    *,
+    stride=1,
+    padding="SAME",
+    bits: int = 8,
+    im2col_unit: bool = True,
+) -> dict:
+    """Analytic cost of one NHWC conv under VDBB + hardware IM2COL.
+
+    The conv is the M×K×N GEMM with M = n·ho·wo, K = kh·kw·c, N = f
+    (exactly what the fused kernel executes), composed with the IM2COL
+    placement choice for the *activation* stream:
+
+      im2col_unit=True  — expansion after the memory: the datapath reads
+                          the raw n·h·w·c tile once (the paper's unit;
+                          kernels/vdbb_im2col_conv's HBM behaviour).
+      im2col_unit=False — expansion before the memory: the stored im2col
+                          tensor is read, M·K bytes (the baseline).
+
+    ``im2col_magnification`` is the ratio of the two — the "bandwidth
+    magnifier"; ``combined_reduction`` composes it with the nnz/bz weight
+    compression, the paper's headline composition.
+    """
+    sh, sw = (stride, stride) if isinstance(stride, int) else stride
+    from repro.kernels.core import conv_geometry  # single source of truth
+
+    _, _, (ho, wo) = conv_geometry(h, w, kh, kw, (sh, sw), padding)
+    m, k = n * ho * wo, kh * kw * c
+    costs = dbb_gemm_costs(m, k, f, fmt, bits)
+    raw_act = n * h * w * c * bits / 8
+    expanded_act = m * k * bits / 8
+    magnification = expanded_act / raw_act
+    costs.update(
+        out_hw=(ho, wo),
+        act_bytes_raw=int(raw_act),
+        act_bytes_expanded=int(expanded_act),
+        act_bytes=int(raw_act if im2col_unit else expanded_act),
+        im2col_magnification=magnification,
+        dense_weight_bytes=int(k * f * bits / 8),
+        combined_reduction=magnification * costs["speedup"],
+    )
+    return costs

@@ -1,0 +1,183 @@
+"""Shared kernel-core for every Pallas kernel in this package.
+
+All kernels in this repo are instances of one scheme — the systolic
+array's *output-stationary* dataflow (DESIGN.md §2, §6):
+
+* a fp32 accumulator tile lives in VMEM scratch for the lifetime of one
+  output tile;
+* the reduction (K) dimension is the *innermost* grid axis, so the
+  accumulator is initialized on the first K step and flushed to the
+  output ref on the last;
+* every other grid axis picks an output tile.
+
+This module owns that plumbing once: the init/accumulate/store pattern
+(:func:`os_accumulate`), K-innermost grid construction and the fp32 VMEM
+scratch + output BlockSpec boilerplate (:func:`os_matmul_call`), tile-size
+resolution (:func:`resolve_tile`), and interpret-mode dispatch
+(:func:`default_interpret` — kernels validate in interpret mode on CPU and
+compile unchanged on TPU).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def default_interpret() -> bool:
+    """Interpret (CPU validation) unless a real TPU backend is present."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def resolve_tile(dim: int, tile: int, name: str = "tile") -> int:
+    """Clamp a requested tile size to the dimension and check divisibility."""
+    t = min(tile, dim)
+    if t <= 0 or dim % t != 0:
+        raise ValueError(f"{name}={tile} does not tile dimension {dim}")
+    return t
+
+
+def os_accumulate(acc_ref, o_ref, contribution, *, grid_axis: int):
+    """Output-stationary accumulation step.
+
+    Zeroes ``acc_ref`` on the first step of the reduction grid axis
+    (``grid_axis``, the innermost one), adds ``contribution`` (fp32), and
+    flushes to ``o_ref`` on the last step. ``contribution`` must have
+    ``acc_ref``'s shape; ``o_ref`` may have a different (same-size) shape —
+    e.g. a conv output tile with leading batch dim — and the accumulator is
+    reshaped on store.
+    """
+
+    @pl.when(pl.program_id(grid_axis) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += contribution
+
+    @pl.when(pl.program_id(grid_axis) == pl.num_programs(grid_axis) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Conv geometry (shared by the dense and VDBB fused im2col conv kernels)
+# ---------------------------------------------------------------------------
+
+
+def _pair(v):
+    if isinstance(v, int):
+        return (v, v)
+    a, b = v
+    return (int(a), int(b))
+
+
+def conv_geometry(h: int, w: int, kh: int, kw: int, stride, padding):
+    """Resolve stride / padding / output size for a 2-D conv.
+
+    ``stride``: int or (sh, sw). ``padding``: 'SAME' | 'VALID' |
+    ((top, bottom), (left, right)). Returns
+    ``((sh, sw), ((pt, pb), (pl, pr)), (ho, wo))`` with XLA's SAME
+    convention (extra padding goes at the end).
+    """
+    sh, sw = _pair(stride)
+
+    def one(dim, k, s, pad):
+        if pad == "SAME":
+            o = -(-dim // s)
+            total = max((o - 1) * s + k - dim, 0)
+            return (total // 2, total - total // 2), o
+        if pad == "VALID":
+            if dim < k:
+                raise ValueError(f"VALID conv: dim {dim} < kernel {k}")
+            return (0, 0), (dim - k) // s + 1
+        lo, hi = pad
+        return (int(lo), int(hi)), (dim + lo + hi - k) // s + 1
+
+    if isinstance(padding, str):
+        padding = padding.upper()
+        if padding not in ("SAME", "VALID"):
+            raise ValueError(f"padding must be 'SAME', 'VALID', or explicit pairs; got {padding!r}")
+        (ph, ho), (pw, wo) = one(h, kh, sh, padding), one(w, kw, sw, padding)
+    else:
+        (ph, ho), (pw, wo) = one(h, kh, sh, padding[0]), one(w, kw, sw, padding[1])
+    if ho < 1 or wo < 1:
+        raise ValueError(f"empty conv output {(ho, wo)}")
+    return (sh, sw), (ph, pw), (ho, wo)
+
+
+def extract_conv_tiles(xp: jax.Array, *, bh, bw, sh, sw, kh, kw, th, tw):
+    """Gather overlapping spatial input tiles (with halo) for a tiled conv.
+
+    ``xp``: padded (N, Hp, Wp, C). Each output tile is bh×bw output pixels;
+    its input footprint is ``bh_in × bw_in = ((bh-1)sh+kh) × ((bw-1)sw+kw)``.
+    Returns ``(N·th·tw, bh_in, bw_in, C)``. Only the halo (kh-sh rows /
+    kw-sw cols per tile seam) is duplicated in HBM — the raw activation
+    tile is still read ~once, unlike the kh·kw× blow-up of explicit im2col.
+    """
+    n, hp, wp, c = xp.shape
+    bh_in = (bh - 1) * sh + kh
+    bw_in = (bw - 1) * sw + kw
+    if th == 1 and tw == 1:
+        return xp
+    rows = (jnp.arange(th) * (bh * sh))[:, None] + jnp.arange(bh_in)[None]
+    cols = (jnp.arange(tw) * (bw * sw))[:, None] + jnp.arange(bw_in)[None]
+    t = jnp.take(xp, rows.reshape(-1), axis=1).reshape(n, th, bh_in, wp, c)
+    t = jnp.take(t, cols.reshape(-1), axis=3).reshape(n, th, bh_in, tw, bw_in, c)
+    return t.transpose(0, 1, 3, 2, 4, 5).reshape(n * th * tw, bh_in, bw_in, c)
+
+
+def conv_patch(x: jax.Array, dy, dx, *, bh, bw, sh, sw):
+    """In-VMEM shifted (strided) view of one kernel tap — the IM2COL unit.
+
+    ``x``: (bh_in, bw_in, C) input tile already resident in VMEM; ``dy, dx``
+    may be traced scalars (tap index from ``pl.program_id``). Returns the
+    (bh·bw, C) activation matrix for that tap without materializing the
+    kh·kw-duplicated im2col tensor anywhere.
+    """
+    c = x.shape[-1]
+    hs = (bh - 1) * sh + 1
+    ws = (bw - 1) * sw + 1
+    patch = jax.lax.dynamic_slice(x, (dy, dx, 0), (hs, ws, c))
+    if sh > 1 or sw > 1:
+        patch = jax.lax.slice(patch, (0, 0, 0), (hs, ws, c), (sh, sw, 1))
+    return patch.reshape(bh * bw, c)
+
+
+def os_matmul_call(
+    kernel,
+    operands: Sequence[jax.Array],
+    *,
+    m: int,
+    n: int,
+    bm: int,
+    bn: int,
+    k_steps: int,
+    in_specs: Sequence[pl.BlockSpec],
+    out_dtype,
+    interpret: bool | None = None,
+):
+    """Launch an output-stationary (M, N) matmul-shaped kernel.
+
+    Builds the K-innermost grid ``(m//bm, n//bn, k_steps)``, the ``(bm, bn)``
+    output BlockSpec and the fp32 VMEM accumulator scratch, and invokes
+    ``pl.pallas_call``. The kernel receives ``(*operand_refs, o_ref,
+    acc_ref)`` and is expected to compute one K-step contribution and hand
+    it to :func:`os_accumulate` with ``grid_axis=2``.
+    """
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=list(in_specs),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=resolve_interpret(interpret),
+    )(*operands)

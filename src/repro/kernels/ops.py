@@ -1,7 +1,8 @@
 """Jit'd public wrappers around the Pallas kernels with mode dispatch.
 
-``interpret`` defaults to True unless a real TPU backend is present, so the
-same call sites validate on CPU and run compiled on TPU.
+``interpret`` defaults to True unless a real TPU backend is present (see
+kernels/core.py), so the same call sites validate on CPU and run compiled
+on TPU.
 """
 from __future__ import annotations
 
@@ -11,12 +12,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.vdbb import DBBFormat, DBBWeight
+from repro.kernels import core
 from repro.kernels import im2col_conv as _im2col
+from repro.kernels import vdbb_im2col_conv as _vconv
 from repro.kernels import vdbb_matmul as _vm
 
 
 def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return core.default_interpret()
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "kb", "interpret"))
@@ -46,10 +49,51 @@ def vdbb_matmul(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("bf", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "bf", "tile_h", "tile_w", "interpret"),
+)
 def fused_im2col_conv(
-    x: jax.Array, w: jax.Array, *, bf: int = 128, interpret: bool | None = None
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride=1,
+    padding="SAME",
+    bf: int = 128,
+    tile_h: int | None = None,
+    tile_w: int | None = None,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Fused im2col+GEMM 'SAME' stride-1 conv (NHWC / HWIO)."""
+    """Fused im2col+GEMM conv (NHWC / HWIO), dense weights."""
     interpret = _default_interpret() if interpret is None else interpret
-    return _im2col.im2col_conv(x, w, bf=bf, interpret=interpret)
+    return _im2col.im2col_conv(
+        x, w, stride=stride, padding=padding, bf=bf,
+        tile_h=tile_h, tile_w=tile_w, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kh", "kw", "stride", "padding", "bf", "tile_h", "tile_w", "interpret"),
+)
+def sparse_conv(
+    x: jax.Array,
+    w: DBBWeight,
+    kh: int,
+    kw: int,
+    *,
+    stride=1,
+    padding="SAME",
+    bf: int = 128,
+    tile_h: int | None = None,
+    tile_w: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused IM2COL × VDBB sparse conv over a compressed DBB conv weight
+    (K = kh·kw·C along the reduction). Dispatches tc vs bw on the weight's
+    pattern-sharing mode — the paper's full datapath in one call."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _vconv.vdbb_im2col_conv(
+        x, w, kh, kw, stride=stride, padding=padding, bf=bf,
+        tile_h=tile_h, tile_w=tile_w, interpret=interpret,
+    )

@@ -4,10 +4,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.core import _pair
 from repro.core.vdbb import (  # noqa: F401  (re-exported oracles)
     DBBFormat,
     DBBWeight,
     dbb_decode,
+    dbb_decode_conv,
+    dbb_encode_conv,
     dbb_matmul_gather_ref,
     dbb_matmul_ref,
 )
@@ -31,33 +34,43 @@ def vdbb_matmul_ref(a: jax.Array, values: jax.Array, indices: jax.Array, fmt: DB
     return jnp.matmul(a, dbb_decode(dw).astype(a.dtype))
 
 
-def im2col_explicit(x: jax.Array, kh: int, kw: int) -> jax.Array:
-    """Explicit im2col producing the duplicated (N, H, W, kh*kw*C) tensor —
+def im2col_explicit(x: jax.Array, kh: int, kw: int, *, stride=1, padding="SAME") -> jax.Array:
+    """Explicit im2col producing the duplicated (N, Ho, Wo, kh*kw*C) tensor —
     the memory-footprint blow-up the hardware unit avoids."""
+    from repro.kernels.core import conv_geometry
+
     n, h, w, c = x.shape
-    ph, pw = kh // 2, kw // 2
-    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    (sh, sw), (ph, pw), (ho, wo) = conv_geometry(h, w, kh, kw, stride, padding)
+    xp = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
     cols = [
-        xp[:, dy : dy + h, dx : dx + w, :] for dy in range(kh) for dx in range(kw)
+        xp[:, dy : dy + (ho - 1) * sh + 1 : sh, dx : dx + (wo - 1) * sw + 1 : sw, :]
+        for dy in range(kh)
+        for dx in range(kw)
     ]
     return jnp.concatenate(cols, axis=-1)
 
 
-def im2col_conv_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+def im2col_conv_ref(x: jax.Array, w: jax.Array, *, stride=1, padding="SAME") -> jax.Array:
     """Conv as explicit im2col + GEMM (the baseline the kernel beats)."""
     kh, kw, c, f = w.shape
-    cols = im2col_explicit(x, kh, kw)  # (N, H, W, kh*kw*C)
-    return jnp.einsum(
-        "nhwk,kf->nhwf", cols, w.transpose(0, 1, 2, 3).reshape(kh * kw * c, f)
-    ).astype(x.dtype)
+    cols = im2col_explicit(x, kh, kw, stride=stride, padding=padding)
+    return jnp.einsum("nhwk,kf->nhwf", cols, w.reshape(kh * kw * c, f)).astype(x.dtype)
 
 
-def conv_lax_ref(x: jax.Array, w: jax.Array) -> jax.Array:
-    """XLA native conv oracle (NHWC, HWIO, SAME, stride 1)."""
+def conv_lax_ref(x: jax.Array, w: jax.Array, *, stride=1, padding="SAME") -> jax.Array:
+    """XLA native conv oracle (NHWC, HWIO)."""
     return jax.lax.conv_general_dilated(
         x,
         w,
-        window_strides=(1, 1),
-        padding="SAME",
+        window_strides=_pair(stride),
+        padding=padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     ).astype(x.dtype)
+
+
+def sparse_conv_ref(x: jax.Array, dw: DBBWeight, kh: int, kw: int, *, stride=1,
+                    padding="SAME") -> jax.Array:
+    """Oracle for the fused IM2COL × VDBB kernel: decode the compressed conv
+    weight to dense (kh, kw, C, F) and run the XLA conv."""
+    w4 = dbb_decode_conv(dw, kh, kw).astype(x.dtype)
+    return conv_lax_ref(x, w4, stride=stride, padding=padding)

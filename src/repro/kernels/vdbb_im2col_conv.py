@@ -1,0 +1,226 @@
+"""Fused IM2COL × VDBB Pallas kernel — the paper's datapath, end-to-end.
+
+This is the composition the paper's headline numbers come from: the
+hardware IM2COL unit expands the activation stream *after* SRAM and feeds
+it straight into the VDBB sparse tensor array. The TPU analogue fuses both
+in-VMEM transforms in one kernel:
+
+  HBM reads:  raw activation tile (once, + tile halo)  ×  compressed
+              weight stream (nnz/bz of dense bytes)
+  in VMEM:    shifted-view im2col tap (the IM2COL unit)
+              → DBB gather (tc) or scatter-expand (bw) (the VDBB mux)
+  compute:    MXU matmuls at nnz/bz occupancy (tc) or dense (bw)
+
+The conv weight (kh, kw, C, F) is DBB-compressed along K = kh·kw·C with
+C % bz == 0, so every bz-block lies inside a single kernel tap and the
+tap (dy, dx) — the innermost grid axis — streams exactly its own C/bz
+compressed blocks per step. Geometry, tiling, and the output-stationary
+accumulator all come from :mod:`repro.kernels.core` (DESIGN.md §6).
+
+Both pattern-sharing modes are provided, mirroring ``vdbb_matmul``:
+``vdbb_im2col_conv_tc`` (group-shared patterns, compressed-K compute) and
+``vdbb_im2col_conv_bw`` (paper-faithful per-column patterns, in-VMEM
+expand). ``kernels.ops.sparse_conv`` dispatches on the weight's format.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.vdbb import DBBFormat, DBBWeight
+from repro.kernels import core
+from repro.kernels.im2col_conv import conv_out_spec, plan_conv
+from repro.kernels.vdbb_matmul import dbb_expand_block
+
+
+def _conv_weight_geometry(dw: DBBWeight, kh: int, kw: int):
+    """Validate and split the compressed-K layout: K = kh·kw·C, C % bz == 0."""
+    k, f = dw.shape
+    bz = dw.fmt.bz
+    if k % (kh * kw) != 0:
+        raise ValueError(f"K={k} not divisible by kh*kw={kh * kw}")
+    c = k // (kh * kw)
+    if c % bz != 0:
+        raise ValueError(
+            f"C={c} not divisible by bz={bz}: a DBB block would straddle "
+            "kernel taps, which the fused conv kernel does not support"
+        )
+    return c, f, c // bz
+
+
+# ---------------------------------------------------------------------------
+# tc mode: shifted view -> gather-compressed-K -> dense MXU dot
+# ---------------------------------------------------------------------------
+
+
+def _vdbb_conv_tc_kernel(
+    x_ref, v_ref, idx_ref, o_ref, acc_ref, *, bz, nnz, kw, sh, sw, bh, bw
+):
+    """Grid: (N·th·tw, F/bf, kh·kw). x: (1, bh_in, bw_in, C);
+    v: (1, cb·nnz, bf); idx: (1, cb, nnz) int32."""
+    t = pl.program_id(2)
+    patch = core.conv_patch(x_ref[0], t // kw, t % kw, bh=bh, bw=bw, sh=sh, sw=sw)
+    c = patch.shape[-1]
+    cb = c // bz
+    a = patch.reshape(bh * bw, cb, bz)
+    idx = idx_ref[0]  # (cb, nnz)
+    # The activation mux: one-hot gather A[:, b, idx[b, j]] -> compressed K.
+    onehot = jax.nn.one_hot(idx, bz, dtype=a.dtype)  # (cb, nnz, bz)
+    ac = jax.lax.dot_general(
+        a,
+        onehot,
+        dimension_numbers=(((2,), (2,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # (cb, bh*bw, nnz)
+    ac = ac.transpose(1, 0, 2).reshape(bh * bw, cb * nnz).astype(a.dtype)
+    contrib = jax.lax.dot(
+        ac, v_ref[0].astype(a.dtype), preferred_element_type=jnp.float32
+    )
+    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2)
+
+
+# ---------------------------------------------------------------------------
+# bw mode: shifted view -> in-VMEM scatter-expand -> dense MXU dot
+# ---------------------------------------------------------------------------
+
+
+def _vdbb_conv_bw_kernel(
+    x_ref, v_ref, idx_ref, o_ref, acc_ref, *, bz, nnz, kw, sh, sw, bh, bw
+):
+    """Grid: (N·th·tw, F/bf, kh·kw). x: (1, bh_in, bw_in, C);
+    v/idx: (1, cb·nnz, bf) — per-column patterns."""
+    t = pl.program_id(2)
+    patch = core.conv_patch(x_ref[0], t // kw, t % kw, bh=bh, bw=bw, sh=sh, sw=sw)
+    bf = o_ref.shape[-1]
+    cb = patch.shape[-1] // bz
+    v = v_ref[0].reshape(cb, nnz, bf)
+    idx = idx_ref[0].reshape(cb, nnz, bf)
+    wd = dbb_expand_block(v, idx, bz)  # (C, bf), the "late mux"
+    contrib = jax.lax.dot(
+        patch, wd.astype(patch.dtype), preferred_element_type=jnp.float32
+    )
+    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2)
+
+
+# ---------------------------------------------------------------------------
+# host wrappers
+# ---------------------------------------------------------------------------
+
+
+def _launch(kernel, x, operands, wspecs, fmt, kh, kw, *, stride, padding, bf,
+            tile_h, tile_w, out_dtype, interpret):
+    n = x.shape[0]
+    xt, g = plan_conv(x, kh, kw, stride=stride, padding=padding,
+                      tile_h=tile_h, tile_w=tile_w)
+    grid = (n * g["th"] * g["tw"], operands[0].shape[-1] // bf, kh * kw)
+    return pl.pallas_call(
+        functools.partial(
+            kernel, bz=fmt.bz, nnz=fmt.nnz, kw=kw,
+            sh=g["sh"], sw=g["sw"], bh=g["bh"], bw=g["bw"],
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g["bh_in"], g["bw_in"], g["c"]), lambda p, j, t: (p, 0, 0, 0)),
+            *wspecs,
+        ],
+        out_specs=conv_out_spec(g, bf),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, g["ho"], g["wo"], operands[0].shape[-1]), out_dtype or x.dtype
+        ),
+        scratch_shapes=[pltpu.VMEM((g["bh"] * g["bw"], bf), jnp.float32)],
+        interpret=core.resolve_interpret(interpret),
+    )(xt, *operands)
+
+
+def vdbb_im2col_conv_tc(
+    x: jax.Array,
+    values: jax.Array,
+    indices: jax.Array,
+    fmt: DBBFormat,
+    kh: int,
+    kw: int,
+    *,
+    stride=1,
+    padding="SAME",
+    bf: int = 128,
+    tile_h: int | None = None,
+    tile_w: int | None = None,
+    out_dtype=None,
+    interpret: bool | None = True,
+) -> jax.Array:
+    """Fused sparse conv, group-shared patterns. x: (N, H, W, C);
+    values: (nb, nnz, F); indices: (nb, nnz) with nb = kh·kw·C/bz."""
+    nb, nnz, f = values.shape
+    c = nb * fmt.bz // (kh * kw)
+    cb = c // fmt.bz
+    bf = core.resolve_tile(f, bf, "bf")
+    v = values.reshape(kh * kw, cb * nnz, f)
+    idx = indices.astype(jnp.int32).reshape(kh * kw, cb, nnz)
+    wspecs = [
+        pl.BlockSpec((1, cb * nnz, bf), lambda p, j, t: (t, 0, j)),
+        pl.BlockSpec((1, cb, nnz), lambda p, j, t: (t, 0, 0)),
+    ]
+    return _launch(
+        _vdbb_conv_tc_kernel, x, (v, idx), wspecs, fmt, kh, kw,
+        stride=stride, padding=padding, bf=bf, tile_h=tile_h, tile_w=tile_w,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+
+
+def vdbb_im2col_conv_bw(
+    x: jax.Array,
+    values: jax.Array,
+    indices: jax.Array,
+    fmt: DBBFormat,
+    kh: int,
+    kw: int,
+    *,
+    stride=1,
+    padding="SAME",
+    bf: int = 128,
+    tile_h: int | None = None,
+    tile_w: int | None = None,
+    out_dtype=None,
+    interpret: bool | None = True,
+) -> jax.Array:
+    """Fused sparse conv, per-column patterns. values/indices: (nb, nnz, F)."""
+    nb, nnz, f = values.shape
+    c = nb * fmt.bz // (kh * kw)
+    cb = c // fmt.bz
+    bf = core.resolve_tile(f, bf, "bf")
+    v = values.reshape(kh * kw, cb * nnz, f)
+    idx = indices.astype(jnp.int32).reshape(kh * kw, cb * nnz, f)
+    wspecs = [
+        pl.BlockSpec((1, cb * nnz, bf), lambda p, j, t: (t, 0, j)),
+        pl.BlockSpec((1, cb * nnz, bf), lambda p, j, t: (t, 0, j)),
+    ]
+    return _launch(
+        _vdbb_conv_bw_kernel, x, (v, idx), wspecs, fmt, kh, kw,
+        stride=stride, padding=padding, bf=bf, tile_h=tile_h, tile_w=tile_w,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+
+
+def vdbb_im2col_conv(
+    x: jax.Array,
+    dw: DBBWeight,
+    kh: int,
+    kw: int,
+    **kw_args,
+) -> jax.Array:
+    """Fused sparse conv over a compressed DBBWeight; dispatches tc vs bw
+    on the weight's pattern-sharing mode (like ``ops.vdbb_matmul``)."""
+    c, f, cb = _conv_weight_geometry(dw, kh, kw)
+    if x.shape[-1] != c:
+        raise ValueError(f"x has C={x.shape[-1]} but weight encodes C={c}")
+    g = dw.fmt.group_size(f)
+    if g == f:
+        return vdbb_im2col_conv_tc(
+            x, dw.values, dw.indices[:, :, 0], dw.fmt, kh, kw, **kw_args
+        )
+    idx = jnp.repeat(dw.indices, g, axis=2) if g > 1 else dw.indices
+    return vdbb_im2col_conv_bw(x, dw.values, idx, dw.fmt, kh, kw, **kw_args)

@@ -15,9 +15,9 @@ Two modes, mirroring DESIGN.md §2:
   nnz/bz; compute stays dense. This is the variant that matches the ASIC's
   storage format bit-for-bit.
 
-Both kernels use an output-stationary fp32 accumulator tile in VMEM —
-the systolic array's output-stationary dataflow — with the K-block grid
-dimension innermost.
+Both kernels are built on :mod:`repro.kernels.core` — the shared
+output-stationary fp32 VMEM accumulator with the K-block grid dimension
+innermost (the systolic array's output-stationary dataflow).
 
 Tiling taxonomy (paper's A×B×C_M×N → BlockSpec): bm×bn is the TPE array
 footprint (output tile), bz=B is the block size, kb is how many blocks
@@ -28,14 +28,23 @@ interpret mode (CPU validation) accepts any shapes.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.vdbb import DBBFormat, DBBWeight
+from repro.core.vdbb import DBBFormat
+from repro.kernels import core
+
+
+def _check_compressed_operands(a, values, fmt):
+    m, k = a.shape
+    nb, nnz, n = values.shape
+    if nb * fmt.bz != k:
+        raise ValueError(f"K={k} != nb*bz = {nb}*{fmt.bz}")
+    if nnz != fmt.nnz:
+        raise ValueError(f"values nnz={nnz} != fmt.nnz={fmt.nnz}")
+    return m, k, nb, n
 
 
 # ---------------------------------------------------------------------------
@@ -46,10 +55,6 @@ from repro.core.vdbb import DBBFormat, DBBWeight
 def _vdbb_tc_kernel(a_ref, v_ref, idx_ref, o_ref, acc_ref, *, bz, nnz, kb):
     """Grid: (M/bm, N/bn, NB/kb). a: (bm, kb*bz); v: (kb*nnz, bn);
     idx: (kb, nnz) int32; acc: (bm, bn) f32 VMEM scratch."""
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
     bm = a_ref.shape[0]
     a = a_ref[...].reshape(bm, kb, bz)
     idx = idx_ref[...]  # (kb, nnz)
@@ -62,13 +67,10 @@ def _vdbb_tc_kernel(a_ref, v_ref, idx_ref, o_ref, acc_ref, *, bz, nnz, kb):
         preferred_element_type=jnp.float32,
     )  # (kb, bm, nnz)
     ac = ac.transpose(1, 0, 2).reshape(bm, kb * nnz).astype(a.dtype)
-    acc_ref[...] += jax.lax.dot(
+    contrib = jax.lax.dot(
         ac, v_ref[...].astype(a.dtype), preferred_element_type=jnp.float32
     )
-
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
-    def _store():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2)
 
 
 def vdbb_matmul_tc(
@@ -85,31 +87,29 @@ def vdbb_matmul_tc(
 ) -> jax.Array:
     """A (M, K) × compressed W -> (M, N). values: (nb, nnz, N);
     indices: (nb, nnz) int (pattern shared across N)."""
-    m, k = a.shape
-    nb, nnz, n = values.shape
-    bz = fmt.bz
-    assert nb * bz == k and nnz == fmt.nnz
-    bm = min(bm, m)
-    bn = min(bn, n)
-    kb = min(kb, nb)
-    assert m % bm == 0 and n % bn == 0 and nb % kb == 0
+    m, k, nb, n = _check_compressed_operands(a, values, fmt)
+    bz, nnz = fmt.bz, fmt.nnz
+    bm = core.resolve_tile(m, bm, "bm")
+    bn = core.resolve_tile(n, bn, "bn")
+    kb = core.resolve_tile(nb, kb, "kb")
     v2 = values.reshape(nb * nnz, n)
     idx = indices.astype(jnp.int32)
-    grid = (m // bm, n // bn, nb // kb)
-    out_dtype = out_dtype or a.dtype
-    return pl.pallas_call(
+    return core.os_matmul_call(
         functools.partial(_vdbb_tc_kernel, bz=bz, nnz=nnz, kb=kb),
-        grid=grid,
+        (a, v2, idx),
+        m=m,
+        n=n,
+        bm=bm,
+        bn=bn,
+        k_steps=nb // kb,
         in_specs=[
             pl.BlockSpec((bm, kb * bz), lambda i, j, s: (i, s)),
             pl.BlockSpec((kb * nnz, bn), lambda i, j, s: (s, j)),
             pl.BlockSpec((kb, nnz), lambda i, j, s: (s, 0)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        out_dtype=out_dtype or a.dtype,
         interpret=interpret,
-    )(a, v2, idx)
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -117,30 +117,28 @@ def vdbb_matmul_tc(
 # ---------------------------------------------------------------------------
 
 
-def _vdbb_bw_kernel(a_ref, v_ref, idx_ref, o_ref, acc_ref, *, bz, nnz, kb):
-    """Grid: (M/bm, N/bn, NB/kb). a: (bm, kb*bz); v: (kb*nnz, bn);
-    idx: (kb*nnz, bn) int32 — per-column patterns."""
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    bm = a_ref.shape[0]
-    bn = o_ref.shape[1]
-    v = v_ref[...].reshape(kb, nnz, bn)
-    idx = idx_ref[...].reshape(kb, nnz, bn)
-    # In-VMEM scatter-expand right before the dot (the "late mux"):
-    # wd[k, i, n] = sum_j [idx[k, j, n] == i] * v[k, j, n]
+def dbb_expand_block(v, idx, bz):
+    """In-VMEM scatter-expand of a compressed (kb, nnz, bn) block to dense
+    (kb*bz, bn) — the "late mux" right before the MAC:
+    wd[k, i, n] = sum_j [idx[k, j, n] == i] * v[k, j, n]."""
+    kb, nnz, bn = v.shape
     i_iota = jax.lax.broadcasted_iota(jnp.int32, (kb, bz, nnz, bn), 1)
     sel = (idx[:, None, :, :] == i_iota).astype(v.dtype)
     wd = (sel * v[:, None, :, :]).sum(axis=2)  # (kb, bz, bn)
-    wd = wd.reshape(kb * bz, bn)
-    acc_ref[...] += jax.lax.dot(
+    return wd.reshape(kb * bz, bn)
+
+
+def _vdbb_bw_kernel(a_ref, v_ref, idx_ref, o_ref, acc_ref, *, bz, nnz, kb):
+    """Grid: (M/bm, N/bn, NB/kb). a: (bm, kb*bz); v: (kb*nnz, bn);
+    idx: (kb*nnz, bn) int32 — per-column patterns."""
+    bn = o_ref.shape[1]
+    v = v_ref[...].reshape(kb, nnz, bn)
+    idx = idx_ref[...].reshape(kb, nnz, bn)
+    wd = dbb_expand_block(v, idx, bz)
+    contrib = jax.lax.dot(
         a_ref[...], wd.astype(a_ref.dtype), preferred_element_type=jnp.float32
     )
-
-    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
-    def _store():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2)
 
 
 def vdbb_matmul_bw(
@@ -156,28 +154,26 @@ def vdbb_matmul_bw(
     interpret: bool = True,
 ) -> jax.Array:
     """A (M, K) × compressed W -> (M, N). values/indices: (nb, nnz, N)."""
-    m, k = a.shape
-    nb, nnz, n = values.shape
-    bz = fmt.bz
-    assert nb * bz == k and nnz == fmt.nnz
-    bm = min(bm, m)
-    bn = min(bn, n)
-    kb = min(kb, nb)
-    assert m % bm == 0 and n % bn == 0 and nb % kb == 0
+    m, k, nb, n = _check_compressed_operands(a, values, fmt)
+    bz, nnz = fmt.bz, fmt.nnz
+    bm = core.resolve_tile(m, bm, "bm")
+    bn = core.resolve_tile(n, bn, "bn")
+    kb = core.resolve_tile(nb, kb, "kb")
     v2 = values.reshape(nb * nnz, n)
     idx2 = indices.astype(jnp.int32).reshape(nb * nnz, n)
-    grid = (m // bm, n // bn, nb // kb)
-    out_dtype = out_dtype or a.dtype
-    return pl.pallas_call(
+    return core.os_matmul_call(
         functools.partial(_vdbb_bw_kernel, bz=bz, nnz=nnz, kb=kb),
-        grid=grid,
+        (a, v2, idx2),
+        m=m,
+        n=n,
+        bm=bm,
+        bn=bn,
+        k_steps=nb // kb,
         in_specs=[
             pl.BlockSpec((bm, kb * bz), lambda i, j, s: (i, s)),
             pl.BlockSpec((kb * nnz, bn), lambda i, j, s: (s, j)),
             pl.BlockSpec((kb * nnz, bn), lambda i, j, s: (s, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        out_dtype=out_dtype or a.dtype,
         interpret=interpret,
-    )(a, v2, idx2)
+    )

@@ -33,6 +33,7 @@ from repro.models.model import LM
 from repro.optim.adamw import OptConfig, init_state
 from repro.sharding.rules import attn_mode, make_rules
 from repro.train.step import make_prefill, make_serve_step, make_train_step
+from repro.xla_utils import cost_analysis_dict  # re-export: tests use dr.cost_analysis_dict
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
 
@@ -198,7 +199,7 @@ def _lower(cfg, shape_name, mesh, rules, *, seq_len=None, global_batch=None):
 
 
 def _cost_record(compiled):
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return {
         "flops": cost.get("flops"),
@@ -285,7 +286,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, sparsity=0.625,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     rec = {
         "arch": arch, "shape": shape_name, "multi_pod": multi_pod,

@@ -1,0 +1,132 @@
+"""SparseCNN — a small CNN inference model on the paper's datapath.
+
+The paper's workload is sparse CNN inference (its Table I/II models are
+AlexNet/ResNet-50-class CNNs). This module provides that workload as a
+first-class model next to the LM zoo: a VGG-style stack of DBBConv2d
+stages (conv → ReLU, stride-2 downsample between stages) closed by global
+average pooling and a DBBLinear classifier head.
+
+Same three-phase lifecycle as the LM (train → constrain → compress):
+``constrain()`` projects every conv/linear weight onto the DBB constraint,
+``compress()`` converts them to the compressed DBBWeight layout, and the
+forward pass then runs the fused IM2COL × VDBB conv per layer
+(``kernel_mode='pallas'``) or the decode + XLA conv reference path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_conv import DBBConv2d
+from repro.core.sparse_linear import DBBLinear, PruneSchedule
+from repro.core.vdbb import DBBFormat, DENSE
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    """Static description of a SparseCNN.
+
+    stage_channels: output channels per stage; stage i > 0 downsamples 2×.
+    convs_per_stage: conv layers in each stage (first one carries the stride).
+    """
+
+    name: str = "sparse-cnn"
+    in_channels: int = 3
+    image_size: int = 32
+    stage_channels: Sequence[int] = (32, 64, 128)
+    convs_per_stage: int = 2
+    kernel_size: int = 3
+    num_classes: int = 10
+    dbb: Optional[DBBFormat] = None
+    dtype: Any = jnp.float32
+    kernel_mode: str = "ref"  # 'ref' | 'pallas'
+
+    @property
+    def fmt(self) -> DBBFormat:
+        return self.dbb or DENSE
+
+    def param_count(self) -> int:
+        total = 0
+        for layer in SparseCNN(self).layers():
+            if isinstance(layer, DBBConv2d):
+                total += layer.kh * layer.kw * layer.in_channels * layer.out_channels
+            elif isinstance(layer, DBBLinear):
+                total += layer.in_features * layer.out_features
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseCNN:
+    cfg: CNNConfig
+
+    # ------------------------------------------------------------- defs
+    def layers(self):
+        """Ordered (conv... , linear head) layer modules."""
+        c = self.cfg
+        out = []
+        prev = c.in_channels
+        for si, ch in enumerate(c.stage_channels):
+            for li in range(c.convs_per_stage):
+                stride = 2 if (si > 0 and li == 0) else 1
+                # the stem (prev == in_channels) stays dense: C=3 is not
+                # bz-blockable, matching the paper's uncompressed first layer.
+                fmt = c.fmt if prev % c.fmt.bz == 0 else DENSE
+                out.append(
+                    DBBConv2d(
+                        prev, ch, kernel_size=c.kernel_size, stride=stride,
+                        padding="SAME", fmt=fmt, use_bias=True, dtype=c.dtype,
+                        kernel_mode=c.kernel_mode,
+                    )
+                )
+                prev = ch
+        out.append(
+            DBBLinear(
+                prev, c.num_classes, fmt=c.fmt, use_bias=True, dtype=c.dtype,
+                kernel_mode="ref",  # head GEMM: M=batch, tiny — ref path
+            )
+        )
+        return out
+
+    def init(self, key) -> dict:
+        layers = self.layers()
+        keys = jax.random.split(key, len(layers))
+        return {f"l{i}": m.init(k) for i, (m, k) in enumerate(zip(layers, keys))}
+
+    # ---------------------------------------------------------- forward
+    def __call__(self, params: dict, x: jax.Array) -> jax.Array:
+        """Inference forward. x: (N, H, W, C) -> logits (N, num_classes)."""
+        layers = self.layers()
+        for i, m in enumerate(layers[:-1]):
+            x = jax.nn.relu(m(params[f"l{i}"], x))
+        x = x.mean(axis=(1, 2))  # global average pool
+        return layers[-1](params[f"l{len(layers) - 1}"], x)
+
+    # ------------------------------------------- the paper's technique
+    def constrain(self, params: dict, step=None, schedule: Optional[PruneSchedule] = None) -> dict:
+        out = {}
+        for i, m in enumerate(self.layers()):
+            out[f"l{i}"] = m.constrain(params[f"l{i}"], step, schedule)
+        return out
+
+    def compress(self, params: dict) -> dict:
+        out = {}
+        for i, m in enumerate(self.layers()):
+            out[f"l{i}"] = m.compress_params(params[f"l{i}"])
+        return out
+
+    # ------------------------------------------------------------ costs
+    def flops(self, batch: int) -> int:
+        """Executed MACs*2 under the time-unrolled occupancy model."""
+        c = self.cfg
+        h = w = c.image_size
+        total = 0
+        for m in self.layers():
+            if isinstance(m, DBBConv2d):
+                total += m.flops(batch, h, w)
+                h, w = m.out_hw(h, w)
+            else:
+                total += m.flops(batch)
+        return total

@@ -1,0 +1,12 @@
+"""Small helpers over jax compiled-artifact introspection APIs."""
+from __future__ import annotations
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions: newer jax
+    returns the per-module properties dict directly, older versions (e.g.
+    0.4.x) wrap it in a 1-element list."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

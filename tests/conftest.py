@@ -1,0 +1,7 @@
+"""Put src/ on sys.path so the suite runs without PYTHONPATH plumbing."""
+import pathlib
+import sys
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)

@@ -13,6 +13,7 @@ import pytest
 from repro.core.vdbb import DBBFormat, dbb_encode
 from repro.kernels import ops, ref
 from repro.kernels.vdbb_matmul import vdbb_matmul_bw, vdbb_matmul_tc
+from repro.xla_utils import cost_analysis_dict
 
 
 def _mk(m, k, n, nnz, group, dtype, seed=0):
@@ -50,6 +51,7 @@ class TestVDBBMatmulTC:
             np.asarray(got, np.float32), np.asarray(want, np.float32), **TOLS[dtype]
         )
 
+    @pytest.mark.slow
     @pytest.mark.parametrize("bm,bn,kb", [(8, 16, 1), (16, 32, 4), (64, 64, 8)])
     def test_tiling_sweep(self, bm, bn, kb):
         a, dw, fmt = _mk(64, 512, 128, 3, "matrix", jnp.float32, seed=7)
@@ -57,6 +59,7 @@ class TestVDBBMatmulTC:
         want = ref.vdbb_matmul_ref(a, dw.values, dw.indices[:, :, 0], fmt)
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
+    @pytest.mark.slow
     def test_flop_scaling_property(self):
         """Time-unrolled occupancy: executed FLOPs scale as nnz/bz."""
         m, k, n = 32, 256, 64
@@ -64,8 +67,8 @@ class TestVDBBMatmulTC:
         for nnz in (1, 2, 4, 8):
             a, dw, fmt = _mk(m, k, n, nnz, "matrix", jnp.float32)
             fn = lambda a, v, i: vdbb_matmul_tc(a, v, i, fmt, bm=32, bn=32, kb=2)
-            an = jax.jit(fn).lower(a, dw.values, dw.indices[:, :, 0]).compile().cost_analysis()
-            flops[nnz] = an["flops"]
+            compiled = jax.jit(fn).lower(a, dw.values, dw.indices[:, :, 0]).compile()
+            flops[nnz] = cost_analysis_dict(compiled)["flops"]
         # main term 2*m*(k*nnz/8)*n dominates; allow the one-hot mux overhead
         for nnz in (1, 2, 4):
             ratio = flops[8] / flops[nnz]
@@ -112,6 +115,7 @@ class TestDispatchAndProperties:
             want = ref.dbb_matmul_ref(a, dw)
             np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
+    @pytest.mark.slow
     def test_property_random_sweep(self):
         """Seeded property sweep (hypothesis unavailable offline): for random
         shapes/nnz, kernel == oracle and output is finite."""

@@ -120,6 +120,7 @@ class TestCheckpoint:
         with pytest.raises(AssertionError):
             store.restore(tmp_path, {"a": jnp.zeros(2), "b": jnp.zeros(1)})
 
+    @pytest.mark.slow
     def test_kill_resume_equivalence(self, tmp_path):
         """Train 6 steps straight == train 3, 'crash', resume, train 3."""
         model = small_model()

@@ -1,40 +1,56 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. ``python -m benchmarks.run``.
+``--smoke`` runs the fast analytic subset (what CI runs so benchmark
+modules can't silently rot); the interpret-mode Pallas sweeps stay out.
 """
 from __future__ import annotations
 
 import argparse
+import pathlib
 import sys
 import traceback
+
+# Runnable from a bare checkout: put src/ on the path (mirrors
+# tests/conftest.py, so CI needs no PYTHONPATH plumbing).
+_SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
 
 def report(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+# (label, module, in the --smoke subset)
 BENCHES = [
-    ("table_v (Table V headline TOPS/W)", "benchmarks.bench_table_v"),
-    ("design_space (Fig 9/10)", "benchmarks.bench_design_space"),
-    ("sparsity_scaling (Fig 12)", "benchmarks.bench_sparsity_scaling"),
-    ("dbb_pruning (Table I/II)", "benchmarks.bench_dbb_pruning"),
-    ("im2col (IM2COL unit, Fig 8)", "benchmarks.bench_im2col"),
-    ("sparse_conv (IM2COL x VDBB fused)", "benchmarks.bench_sparse_conv"),
-    ("kernels (VDBB matmul)", "benchmarks.bench_kernels"),
-    ("roofline (EXPERIMENTS §Roofline)", "benchmarks.roofline"),
+    ("table_v (Table V headline TOPS/W)", "benchmarks.bench_table_v", True),
+    ("design_space (Fig 9/10)", "benchmarks.bench_design_space", True),
+    ("sparsity_scaling (Fig 12)", "benchmarks.bench_sparsity_scaling", True),
+    ("dbb_pruning (Table I/II)", "benchmarks.bench_dbb_pruning", False),
+    ("im2col (IM2COL unit, Fig 8)", "benchmarks.bench_im2col", False),
+    ("sparse_conv (IM2COL x VDBB fused)", "benchmarks.bench_sparse_conv", False),
+    ("kernels (VDBB matmul)", "benchmarks.bench_kernels", False),
+    ("roofline (EXPERIMENTS §Roofline)", "benchmarks.roofline", True),
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="fast analytic subset (CI): energy model + measured-act benches",
+    )
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = []
     import importlib
 
-    for label, mod in BENCHES:
+    for label, mod, smoke_ok in BENCHES:
         if args.only and args.only not in mod:
+            continue
+        if args.smoke and not smoke_ok:
             continue
         try:
             importlib.import_module(mod).run(report)

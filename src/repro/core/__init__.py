@@ -15,6 +15,20 @@ from repro.core.vdbb import (  # noqa: F401
     dbb_prune,
     satisfies_dbb,
 )
+from repro.core.act_sparsity import (  # noqa: F401
+    ActStats,
+    act_dbb_decode,
+    act_dbb_encode,
+    act_dbb_mask,
+    act_dbb_prune,
+    act_fmt,
+    block_nnz_histogram,
+    collect_activations,
+    combine,
+    measure_activation,
+    record_activation,
+    zero_fraction,
+)
 from repro.core.sparse_linear import DBBLinear, PruneSchedule  # noqa: F401
 from repro.core.sparse_conv import DBBConv2d  # noqa: F401
 from repro.core.energy_model import (  # noqa: F401
@@ -25,4 +39,5 @@ from repro.core.energy_model import (  # noqa: F401
     TPU_V5E,
     conv_workload,
     fmt_for_sparsity,
+    model_workload,
 )

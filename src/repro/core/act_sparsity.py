@@ -1,0 +1,303 @@
+"""Activation-sparsity subsystem: measure → gate → account (DESIGN.md §7).
+
+The paper's headline efficiencies compose three effects — weight sparsity
+(VDBB), *activation* sparsity (zero-operand clock gating, §IV-A2), and data
+reuse (IM2COL). The weight side is modeled structurally (`vdbb.py`); this
+module gives the activation side the same first-class treatment instead of
+a free-floating ``act_sparsity=0.5`` scalar:
+
+* **measure** — :func:`measure_activation` is a pure-jnp statistics pass
+  over any intermediate activation: exact zero fraction (what the hardware
+  clock-gates on), a threshold variant (|x| <= t, what threshold gating
+  would buy), and the per-bz-block occupancy histogram that says which DBB
+  density bound the activations *themselves* would satisfy.
+  :class:`ActStats` carries the result plus a MAC weight so per-layer stats
+  compose over a whole model (:func:`combine`).
+
+* **gate** — :func:`act_dbb_prune` / :func:`act_dbb_encode` apply the
+  paper's DBB structure to the *activation* K-blocks (block-wise top-nnz,
+  pattern shared across the M tile — the tc co-design constraint), reusing
+  the `vdbb.py` machinery verbatim on the transposed tile. A structurally
+  pruned activation runs through the tc kernel's compressed-K contraction
+  unchanged, so the contraction can shrink with *measured* activation
+  density (:func:`act_fmt` picks the bound from an :class:`ActStats`).
+
+* **account** — `dbb_gemm_costs`/`dbb_conv_costs` take ``act=ActStats`` and
+  `energy_model.power_mw`/`tops_per_w`/`conv_workload` accept an
+  :class:`ActStats` anywhere they accepted a scalar (duck-typed on
+  ``.sparsity``), and `energy_model.model_workload` composes per-layer
+  (costs, fmt, stats) triples into whole-model energy.
+
+Collection is wired into the model lifecycle: ``SparseCNN.apply(...,
+collect_act_stats=True)`` measures every conv/head input explicitly, and
+``LM.forward(..., collect_act_stats=True)`` records every ``apply_linear``
+input through the thread-local collector below. The collector silently
+skips traced values, so collection must run eagerly (the LM forward
+automatically falls back to the unrolled, remat-free path while a
+collector is installed).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vdbb import (
+    DBBFormat,
+    DBBWeight,
+    DEFAULT_BZ,
+    dbb_decode,
+    dbb_encode,
+    dbb_mask,
+)
+
+
+# ---------------------------------------------------------------------------
+# Measurement (pure jnp)
+# ---------------------------------------------------------------------------
+
+
+def zero_fraction(x: jax.Array) -> jax.Array:
+    """Exact fraction of zero entries — what zero-operand clock gating sees."""
+    return jnp.mean((x == 0).astype(jnp.float32))
+
+
+def near_zero_fraction(x: jax.Array, threshold: float) -> jax.Array:
+    """Fraction with |x| <= threshold — what threshold gating would gate."""
+    return jnp.mean((jnp.abs(x) <= threshold).astype(jnp.float32))
+
+
+def block_nnz_counts(x: jax.Array, bz: int = DEFAULT_BZ) -> jax.Array:
+    """Non-zeros per bz-block along the feature (last) dim: (..., K/bz) int32.
+
+    Requires the feature dim to be bz-blockable (K % bz == 0), same as the
+    weight-side constraint in `vdbb.py`.
+    """
+    k = x.shape[-1]
+    if k % bz != 0:
+        raise ValueError(f"feature dim K={k} not divisible by bz={bz}")
+    xb = x.reshape(*x.shape[:-1], k // bz, bz)
+    return (xb != 0).sum(axis=-1).astype(jnp.int32)
+
+
+def block_nnz_histogram(x: jax.Array, bz: int = DEFAULT_BZ) -> jax.Array:
+    """Histogram over per-block occupancy: (bz+1,) counts of blocks with
+    0..bz non-zeros. Bin b is how many activation K-blocks a DBB bound of
+    nnz=b would hold exactly; the CDF answers "what nnz covers p% of blocks".
+    """
+    counts = block_nnz_counts(x, bz).reshape(-1)
+    return (counts[:, None] == jnp.arange(bz + 1)[None, :]).sum(axis=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ActStats:
+    """Per-layer activation statistics (host floats; safe to hash/print).
+
+    ``sparsity`` (== ``zero_frac``) is what the energy model's clock gating
+    consumes; anywhere the cost layer accepted a scalar activation sparsity
+    it now also accepts an ``ActStats`` (duck-typed on this property).
+    ``macs`` weights this layer in whole-model composition (:func:`combine`).
+    """
+
+    name: str = ""
+    shape: tuple = ()
+    numel: int = 0
+    zero_frac: float = 0.0
+    near_zero_frac: float = 0.0
+    threshold: float = 0.0
+    bz: int = DEFAULT_BZ
+    block_nnz_mean: float = float("nan")  # NaN when K % bz != 0
+    macs: int = 0
+
+    @property
+    def sparsity(self) -> float:
+        return self.zero_frac
+
+    @property
+    def density(self) -> float:
+        return 1.0 - self.zero_frac
+
+    def __repr__(self):  # compact: shows up in benchmark tables
+        return (
+            f"ActStats({self.name or '?'} {self.shape} zero={self.zero_frac:.3f}"
+            f" |x|<={self.threshold:g}={self.near_zero_frac:.3f}"
+            f" blk_nnz={self.block_nnz_mean:.2f}/{self.bz})"
+        )
+
+
+def measure_activation(
+    x: jax.Array,
+    *,
+    name: str = "",
+    threshold: float = 0.0,
+    bz: int = DEFAULT_BZ,
+    macs: int = 0,
+) -> ActStats:
+    """Measure one activation tensor into an :class:`ActStats` (host floats).
+
+    Must be called on a concrete array (eager / outside jit) — the result
+    is a plain dataclass, not a pytree.
+    """
+    zf = float(zero_fraction(x))
+    nf = float(near_zero_fraction(x, threshold)) if threshold > 0 else zf
+    if x.shape[-1] % bz == 0:
+        bnm = float(jnp.mean(block_nnz_counts(x, bz).astype(jnp.float32)))
+    else:
+        bnm = float("nan")
+    return ActStats(
+        name=name, shape=tuple(x.shape), numel=int(x.size), zero_frac=zf,
+        near_zero_frac=nf, threshold=threshold, bz=bz, block_nnz_mean=bnm,
+        macs=int(macs),
+    )
+
+
+def combine(stats: Sequence[ActStats], name: str = "combined") -> ActStats:
+    """MAC-weighted aggregate of per-layer stats (numel-weighted fallback).
+
+    MAC weighting is the energy-relevant composition: a layer's activation
+    stream is read once per executed MAC row, so its sparsity matters in
+    proportion to the compute it feeds.
+    """
+    if not stats:
+        raise ValueError("combine() of empty stats")
+    weights = [s.macs for s in stats]
+    if not any(weights):
+        weights = [s.numel for s in stats]
+    total = float(sum(weights)) or 1.0
+    wavg = lambda f: sum(f(s) * w for s, w in zip(stats, weights)) / total
+    bnms = [(s, w) for s, w in zip(stats, weights) if not math.isnan(s.block_nnz_mean)]
+    bnm_total = float(sum(w for _, w in bnms))
+    return ActStats(
+        name=name,
+        shape=(),
+        numel=sum(s.numel for s in stats),
+        zero_frac=wavg(lambda s: s.zero_frac),
+        near_zero_frac=wavg(lambda s: s.near_zero_frac),
+        threshold=stats[0].threshold,
+        bz=stats[0].bz,
+        block_nnz_mean=(
+            sum(s.block_nnz_mean * w for s, w in bnms) / bnm_total
+            if bnms else float("nan")
+        ),
+        macs=sum(s.macs for s in stats),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Structural activation pruning (gate) — vdbb.py machinery on the M tile
+# ---------------------------------------------------------------------------
+
+
+def _act_fmt_matrix(fmt: DBBFormat) -> DBBFormat:
+    """The tile-shared pattern constraint: one pattern per K-block across
+    the whole M tile (the tc co-design; group='matrix' on the transpose)."""
+    return dataclasses.replace(fmt, group="matrix")
+
+
+def act_dbb_mask(x: jax.Array, fmt: DBBFormat) -> jax.Array:
+    """Boolean keep-mask for block-wise top-nnz activation pruning.
+
+    ``x`` is (..., K) with DBB blocks along the feature dim; the kept
+    pattern is shared across all leading (M) dims — scored by the summed
+    |x| over the tile, exactly `dbb_mask` on the transposed tile.
+    """
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    mask_t = dbb_mask(x2.T, _act_fmt_matrix(fmt))  # (K, M)
+    return mask_t.T.reshape(x.shape)
+
+
+def act_dbb_prune(x: jax.Array, fmt: DBBFormat) -> jax.Array:
+    """Project activations onto the DBB constraint (block-wise top-nnz,
+    tile-shared pattern). The result feeds the tc kernel unchanged — its
+    compressed-K gather only ever reads the surviving positions."""
+    if fmt.is_dense:
+        return x
+    return jnp.where(act_dbb_mask(x, fmt), x, jnp.zeros_like(x))
+
+
+def act_dbb_encode(x: jax.Array, fmt: DBBFormat) -> DBBWeight:
+    """Compress a (M, K) activation tile along K via `dbb_encode` on the
+    transpose (pattern shared across M). ``dbb_decode(...).T`` round-trips
+    bit-exactly to :func:`act_dbb_prune` of the same tile."""
+    if x.ndim != 2:
+        raise ValueError(f"activation tile must be (M, K); got {x.shape}")
+    return dbb_encode(x.T, _act_fmt_matrix(fmt), prune=True)
+
+
+def act_dbb_decode(ax: DBBWeight) -> jax.Array:
+    """Expand compressed activations back to the dense (M, K) tile."""
+    return dbb_decode(ax).T
+
+
+def act_fmt(stats: ActStats, bz: Optional[int] = None) -> DBBFormat:
+    """DBB bound the measured activation density supports: the smallest
+    nnz whose density covers the measured non-zero fraction (conservative
+    ceil, clamped to [1, bz]); pattern-shared for the tc contraction.
+    ``bz`` defaults to the block size the stats were measured with."""
+    bz = stats.bz if bz is None else bz
+    nnz = math.ceil((1.0 - stats.sparsity) * bz - 1e-9)
+    return DBBFormat(bz=bz, nnz=max(1, min(bz, nnz)), group="matrix")
+
+
+# ---------------------------------------------------------------------------
+# Collection (thread-local, eager-only)
+# ---------------------------------------------------------------------------
+
+
+class ActCollector:
+    """Accumulates :class:`ActStats` recorded during a forward pass."""
+
+    def __init__(self, bz: int = DEFAULT_BZ, threshold: float = 0.0):
+        self.bz = bz
+        self.threshold = threshold
+        self.stats: list[ActStats] = []
+
+    def add(self, x: jax.Array, name: str = "", macs: int = 0):
+        self.stats.append(
+            measure_activation(
+                x, name=name or f"act{len(self.stats)}",
+                threshold=self.threshold, bz=self.bz, macs=macs,
+            )
+        )
+
+    def combined(self, name: str = "combined") -> ActStats:
+        return combine(self.stats, name)
+
+
+_CTX = threading.local()
+
+
+def collecting() -> bool:
+    """True while a collector is installed (models switch to eager paths)."""
+    return getattr(_CTX, "collector", None) is not None
+
+
+@contextlib.contextmanager
+def collect_activations(bz: int = DEFAULT_BZ, threshold: float = 0.0):
+    """Install a collector so :func:`record_activation` accumulates stats.
+
+    Nested use shadows the outer collector. Traced values (under jit/scan)
+    are skipped silently — run the forward eagerly to collect.
+    """
+    col = ActCollector(bz=bz, threshold=threshold)
+    prev = getattr(_CTX, "collector", None)
+    _CTX.collector = col
+    try:
+        yield col
+    finally:
+        _CTX.collector = prev
+
+
+def record_activation(x: jax.Array, name: str = "", macs: int = 0):
+    """Record ``x`` into the active collector; no-op without one or when
+    ``x`` is a tracer (jit/scan — nothing concrete to measure)."""
+    col: Optional[ActCollector] = getattr(_CTX, "collector", None)
+    if col is None or isinstance(x, jax.core.Tracer):
+        return
+    col.add(x, name=name, macs=macs)

@@ -70,6 +70,15 @@ TECH = {
 }
 
 
+def _act_frac(act) -> float:
+    """Scalar activation sparsity from a float or an ActStats-like object
+    (single source of truth: ``vdbb._act_sparsity_frac``). Every
+    ``act_sparsity=`` parameter below accepts either."""
+    from repro.core.vdbb import _act_sparsity_frac
+
+    return _act_sparsity_frac(0.5 if act is None else act)
+
+
 @dataclasses.dataclass(frozen=True)
 class STAConfig:
     """An A x B x C _ M x N systolic tensor array design point.
@@ -193,8 +202,13 @@ class STAConfig:
         r = STAConfig(A=REF["A"], B=REF["B"], C=REF["C"], M=REF["M"], N=REF["N"], mode="vdbb")
         return r._datapath_cost_units() * r.M * r.N
 
-    def power_mw(self, fmt: DBBFormat, act_sparsity: float = 0.5) -> float:
-        """Total power for a model with weight format fmt."""
+    def power_mw(self, fmt: DBBFormat, act_sparsity=0.5) -> float:
+        """Total power for a model with weight format fmt.
+
+        ``act_sparsity``: scalar or a measured ``ActStats`` (per-layer
+        zero fraction of the activations actually streamed; DESIGN.md §7).
+        """
+        act_sparsity = _act_frac(act_sparsity)
         t = TECH[self.tech]
         s = self.speedup(fmt)
         # STA power scales with datapath cost; act-CG gates the gateable
@@ -237,7 +251,8 @@ class STAConfig:
         return area * t["area_scale"]
 
     # ---------------- headline metrics ----------------
-    def tops_per_w(self, fmt: DBBFormat, act_sparsity: float = 0.5) -> float:
+    def tops_per_w(self, fmt: DBBFormat, act_sparsity=0.5) -> float:
+        """Effective TOPS/W; ``act_sparsity`` is a scalar or ``ActStats``."""
         return self.effective_tops(fmt) / (self.power_mw(fmt, act_sparsity) / 1e3)
 
     def tops_per_mm2(self, fmt: DBBFormat) -> float:
@@ -257,7 +272,7 @@ PARETO_DESIGN = STAConfig(A=4, B=8, C=8, M=4, N=8, mode="vdbb", im2col=True)
 
 
 def conv_workload(design: STAConfig, costs: dict, fmt: DBBFormat,
-                  act_sparsity: float = 0.5) -> dict:
+                  act_sparsity=None) -> dict:
     """Map one conv layer (``dbb_conv_costs`` dict) onto an STA design point.
 
     Cycles follow the time-unrolled occupancy (executed MACs over the
@@ -265,9 +280,21 @@ def conv_workload(design: STAConfig, costs: dict, fmt: DBBFormat,
     design's calibrated operating point. The activation stream uses the
     raw-tile bytes when the design has the IM2COL unit and the expanded
     im2col bytes otherwise — the two placements of Fig 8.
+
+    ``act_sparsity``: scalar or measured ``ActStats`` for this layer;
+    when None it falls back to the sparsity recorded in ``costs`` (set by
+    ``dbb_conv_costs(act=...)``), then to the paper's 0.5 assumption.
     """
+    if act_sparsity is None:
+        act_sparsity = costs.get("act_sparsity", 0.5)
+    act_sparsity = _act_frac(act_sparsity)
     t = TECH[design.tech]
-    act_bytes = costs["act_bytes_raw"] if design.im2col else costs["act_bytes_expanded"]
+    # plain-GEMM cost dicts (dbb_gemm_costs) have no im2col placement split
+    act_bytes = (
+        costs.get("act_bytes_raw", costs["act_bytes"])
+        if design.im2col
+        else costs.get("act_bytes_expanded", costs["act_bytes"])
+    )
     wbytes = costs["weight_bytes"] if design.mode != "dense" else costs["dense_weight_bytes"]
     # mode-aware occupancy: a dense SA runs all dense MACs; fixed DBB is
     # capped at its design point; only VDBB tracks the model's nnz/bz
@@ -281,8 +308,43 @@ def conv_workload(design: STAConfig, costs: dict, fmt: DBBFormat,
         energy_j=power_w * time_s,
         act_bytes=int(act_bytes),
         weight_bytes=int(wbytes),
-        sram_reads_saved=costs["im2col_magnification"] if design.im2col else 1.0,
+        sram_reads_saved=costs.get("im2col_magnification", 1.0) if design.im2col else 1.0,
         effective_tops=costs["effective_ops"] / max(time_s, 1e-30) / 1e12,
+        act_sparsity=act_sparsity,
+        effective_ops=costs["effective_ops"],
+    )
+
+
+def model_workload(design: STAConfig, layers) -> dict:
+    """Compose per-layer workloads over a whole model (DESIGN.md §7).
+
+    ``layers``: iterable of (costs, fmt, act_sparsity) triples — one per
+    GEMM/conv layer, where ``costs`` is a ``dbb_gemm_costs``/
+    ``dbb_conv_costs`` dict and ``act_sparsity`` is that layer's measured
+    ``ActStats`` (or a scalar, or None to use what ``costs`` recorded).
+
+    Returns whole-model totals: energy/time sums, effective TOPS/W from
+    the summed effective ops over the summed energy (the honest Fig 12
+    composition — each layer runs at its *own* measured activation
+    sparsity), plus the executed-MAC-weighted mean activation sparsity.
+    """
+    layers = list(layers)
+    per_layer = [conv_workload(design, c, f, a) for c, f, a in layers]
+    if not per_layer:
+        raise ValueError("model_workload() of empty layer list")
+    time_s = sum(w["time_s"] for w in per_layer)
+    energy = sum(w["energy_j"] for w in per_layer)
+    eff_ops = sum(w["effective_ops"] for w in per_layer)
+    weights = [c["executed_macs"] for c, _, _ in layers]
+    wsum = float(sum(weights)) or 1.0
+    mean_act = sum(w["act_sparsity"] * m for w, m in zip(per_layer, weights)) / wsum
+    return dict(
+        layers=per_layer,
+        time_s=time_s,
+        energy_j=energy,
+        effective_tops=eff_ops / max(time_s, 1e-30) / 1e12,
+        tops_per_w=eff_ops / 1e12 / max(energy, 1e-30),
+        mean_act_sparsity=mean_act,
     )
 
 # TPU v5e roofline constants (used by benchmarks/roofline.py; kept here so

@@ -283,18 +283,45 @@ def dbb_matmul_gather_ref(a: jax.Array, dw: DBBWeight) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def dbb_gemm_costs(m: int, k: int, n: int, fmt: DBBFormat, bits: int = 8) -> dict:
+def _act_sparsity_frac(act) -> Optional[float]:
+    """Scalar activation sparsity from a float or an ActStats-like object
+    (duck-typed on ``.sparsity`` to avoid a core ↔ act_sparsity cycle)."""
+    if act is None:
+        return None
+    return float(getattr(act, "sparsity", act))
+
+
+def dbb_gemm_costs(m: int, k: int, n: int, fmt: DBBFormat, bits: int = 8,
+                   *, act=None) -> dict:
     """Analytic cost of one M×K×N GEMM under VDBB, paper-style accounting.
 
     'cycles' follows the time-unrolled occupancy: nnz cycles per block
     instead of bz. 'weight_bytes' is the compressed stream (values+mask).
+
+    ``act`` (optional) is the layer's activation sparsity — a scalar or a
+    measured :class:`repro.core.act_sparsity.ActStats`. When given, the
+    dict carries ``act_sparsity`` (``act_measured=True`` for stats objects),
+    ``gated_mac_frac`` (executed MACs whose activation operand is zero —
+    the clock-gating opportunity of paper §IV-A2) and ``act_nonzero_bytes``
+    (the zero-skipped activation stream a compressed format would move);
+    otherwise the paper's 50% assumption is recorded with
+    ``act_measured=False``.
     """
+    nb, rem = divmod(k, fmt.bz)
+    if rem and not fmt.is_dense:
+        raise ValueError(f"K={k} not divisible by block size bz={fmt.bz}")
     dense_macs = m * k * n
     eff_macs = dense_macs  # effective (useful) ops, paper counts these
-    hw_macs = m * (k // fmt.bz) * fmt.nnz * n  # actually executed
-    wbytes = (k // fmt.bz) * n * (fmt.nnz * bits + fmt.bz) / 8
+    # actually executed; a trailing partial block (dense formats only, e.g.
+    # the C=3 stem) runs — and stores — its rem positions uncompressed.
+    hw_macs = m * (nb * fmt.nnz + rem) * n
+    wbytes = (nb * (fmt.nnz * bits + fmt.bz) + rem * (bits + 1)) * n / 8
     abytes = m * k * bits / 8
     obytes = m * n * 4  # int32/fp32 accumulators
+    act_sp = _act_sparsity_frac(act)
+    measured = hasattr(act, "sparsity")
+    if act_sp is None:
+        act_sp = 0.5  # the paper's nominal assumption (Table IV/V)
     return dict(
         dense_macs=dense_macs,
         effective_ops=2 * eff_macs,
@@ -304,6 +331,10 @@ def dbb_gemm_costs(m: int, k: int, n: int, fmt: DBBFormat, bits: int = 8) -> dic
         act_bytes=int(abytes),
         out_bytes=int(obytes),
         weight_compression=fmt.compression_ratio(bits),
+        act_sparsity=act_sp,
+        act_measured=measured,
+        gated_mac_frac=act_sp,
+        act_nonzero_bytes=int(abytes * (1.0 - act_sp)),
     )
 
 
@@ -321,8 +352,12 @@ def dbb_conv_costs(
     padding="SAME",
     bits: int = 8,
     im2col_unit: bool = True,
+    act=None,
 ) -> dict:
     """Analytic cost of one NHWC conv under VDBB + hardware IM2COL.
+
+    ``act``: this layer's activation sparsity (scalar or measured
+    ``ActStats``), forwarded to :func:`dbb_gemm_costs`.
 
     The conv is the M×K×N GEMM with M = n·ho·wo, K = kh·kw·c, N = f
     (exactly what the fused kernel executes), composed with the IM2COL
@@ -343,7 +378,7 @@ def dbb_conv_costs(
 
     _, _, (ho, wo) = conv_geometry(h, w, kh, kw, (sh, sw), padding)
     m, k = n * ho * wo, kh * kw * c
-    costs = dbb_gemm_costs(m, k, f, fmt, bits)
+    costs = dbb_gemm_costs(m, k, f, fmt, bits, act=act)
     raw_act = n * h * w * c * bits / 8
     expanded_act = m * k * bits / 8
     magnification = expanded_act / raw_act
@@ -352,6 +387,9 @@ def dbb_conv_costs(
         act_bytes_raw=int(raw_act),
         act_bytes_expanded=int(expanded_act),
         act_bytes=int(raw_act if im2col_unit else expanded_act),
+        act_nonzero_bytes=int(
+            (raw_act if im2col_unit else expanded_act) * (1.0 - costs["act_sparsity"])
+        ),
         im2col_magnification=magnification,
         dense_weight_bytes=int(k * f * bits / 8),
         combined_reduction=magnification * costs["speedup"],

@@ -49,6 +49,29 @@ def vdbb_matmul(
     )
 
 
+def sparse_matmul(
+    a: jax.Array,
+    w: DBBWeight,
+    *,
+    act_fmt: DBBFormat | None = None,
+    **kw,
+) -> jax.Array:
+    """:func:`vdbb_matmul` with optional structural activation gating.
+
+    ``act_fmt`` (DESIGN.md §7) projects the activations onto the
+    block-wise top-|x| DBB constraint (pattern shared across the M tile)
+    before the kernel — the activation-side twin of the weight format,
+    typically ``act_fmt(measure_activation(a))`` from
+    :mod:`repro.core.act_sparsity`. Pruned activations flow through the
+    tc kernel's compressed-K contraction unchanged.
+    """
+    if act_fmt is not None:
+        from repro.core.act_sparsity import act_dbb_prune
+
+        a = act_dbb_prune(a, act_fmt)
+    return vdbb_matmul(a, w, **kw)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("stride", "padding", "bf", "tile_h", "tile_w", "interpret"),

@@ -98,11 +98,53 @@ class SparseCNN:
     # ---------------------------------------------------------- forward
     def __call__(self, params: dict, x: jax.Array) -> jax.Array:
         """Inference forward. x: (N, H, W, C) -> logits (N, num_classes)."""
+        return self.apply(params, x)
+
+    def apply(
+        self,
+        params: dict,
+        x: jax.Array,
+        *,
+        collect_act_stats: bool = False,
+        act_threshold: float = 0.0,
+    ):
+        """Inference forward, optionally measuring activation sparsity.
+
+        With ``collect_act_stats=True`` (eager-only; DESIGN.md §7) returns
+        ``(logits, stats)`` where ``stats`` is one
+        :class:`repro.core.act_sparsity.ActStats` per layer, measured on
+        the activation each layer *reads* (the tensor the IM2COL unit /
+        GEMM streams), MAC-weighted for whole-model composition.
+        """
         layers = self.layers()
+        stats = []
+        if collect_act_stats:
+            from repro.core.act_sparsity import measure_activation
+
+            h, w = x.shape[1], x.shape[2]
         for i, m in enumerate(layers[:-1]):
+            if collect_act_stats:
+                stats.append(
+                    measure_activation(
+                        x, name=f"l{i}", threshold=act_threshold,
+                        macs=m.flops(x.shape[0], h, w) // 2,
+                    )
+                )
+                h, w = m.out_hw(h, w)
             x = jax.nn.relu(m(params[f"l{i}"], x))
         x = x.mean(axis=(1, 2))  # global average pool
-        return layers[-1](params[f"l{len(layers) - 1}"], x)
+        head = layers[-1]
+        if collect_act_stats:
+            stats.append(
+                measure_activation(
+                    x, name=f"l{len(layers) - 1}", threshold=act_threshold,
+                    macs=head.flops(x.shape[0]) // 2,
+                )
+            )
+        logits = head(params[f"l{len(layers) - 1}"], x)
+        if collect_act_stats:
+            return logits, tuple(stats)
+        return logits
 
     # ------------------------------------------- the paper's technique
     def constrain(self, params: dict, step=None, schedule: Optional[PruneSchedule] = None) -> dict:
@@ -118,6 +160,37 @@ class SparseCNN:
         return out
 
     # ------------------------------------------------------------ costs
+    def layer_costs(self, batch: int, *, bits: int = 8, stats=None) -> list:
+        """Per-conv-layer ``dbb_conv_costs`` dicts for this model.
+
+        ``stats`` (optional): per-layer ActStats from
+        ``apply(collect_act_stats=True)`` — layer i's measured activation
+        sparsity is recorded into its cost dict, ready for
+        ``energy_model.model_workload``. Returns (name, costs, fmt) triples.
+        """
+        from repro.core.vdbb import dbb_conv_costs
+
+        c = self.cfg
+        h = w = c.image_size
+        out = []
+        for i, m in enumerate(self.layers()):
+            if not isinstance(m, DBBConv2d):
+                continue
+            act = stats[i] if stats is not None else None
+            out.append(
+                (
+                    f"l{i}",
+                    dbb_conv_costs(
+                        batch, h, w, m.in_channels, m.out_channels, m.kh, m.kw,
+                        m.fmt, stride=m.stride, padding=m.padding, bits=bits,
+                        act=act,
+                    ),
+                    m.fmt,
+                )
+            )
+            h, w = m.out_hw(h, w)
+        return out
+
     def flops(self, batch: int) -> int:
         """Executed MACs*2 under the time-unrolled occupancy model."""
         c = self.cfg

@@ -204,7 +204,22 @@ def apply_linear(x: jax.Array, w, bias=None) -> jax.Array:
     activations into compressed-K, then a dense contraction whose FLOPs
     scale with nnz/bz. On TPU the Pallas kernel implements the same
     contraction; this form is used under pjit so XLA shards it.
+
+    While an activation collector is installed (DESIGN.md §7;
+    ``LM.forward(collect_act_stats=True)``) the input activation is
+    measured here, MAC-weighted by this GEMM's executed occupancy.
     """
+    from repro.core import act_sparsity
+
+    if act_sparsity.collecting():
+        k = x.shape[-1]
+        rows = x.size // max(k, 1)
+        if isinstance(w, DBBWeight):
+            k_eff = (w.shape[0] // w.fmt.bz) * w.fmt.nnz
+            macs = rows * k_eff * w.shape[1]
+        else:
+            macs = rows * k * w.shape[-1]
+        act_sparsity.record_activation(x, macs=macs)
     if isinstance(w, DBBWeight):
         fmt = w.fmt
         k, n = w.shape

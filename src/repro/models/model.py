@@ -215,8 +215,32 @@ class LM:
         return x + y2, new_cache
 
     # ---------------------------------------------------------- forward
-    def forward(self, params, batch, *, return_cache: bool = False):
-        """Full-sequence forward (train / prefill). Returns (logits, cache)."""
+    def forward(
+        self,
+        params,
+        batch,
+        *,
+        return_cache: bool = False,
+        collect_act_stats: bool = False,
+        act_threshold: float = 0.0,
+    ):
+        """Full-sequence forward (train / prefill). Returns (logits, cache).
+
+        ``collect_act_stats=True`` (eager-only; DESIGN.md §7) additionally
+        returns the per-GEMM ActStats recorded by ``apply_linear``: the
+        result becomes ``(logits[, cache], stats)``. While collecting, the
+        scan/remat paths are bypassed (their bodies are traced, so there
+        would be nothing concrete to measure).
+        """
+        if collect_act_stats:
+            from repro.core.act_sparsity import collect_activations
+
+            with collect_activations(threshold=act_threshold) as col:
+                out = self.forward(params, batch, return_cache=return_cache)
+            out = out if isinstance(out, tuple) else (out,)
+            return (*out, col.stats)
+        from repro.core.act_sparsity import collecting
+
         c = self.cfg
         h = self._embed(params, batch)
         b, s, _ = h.shape
@@ -233,15 +257,16 @@ class LM:
             return x, caches
 
         body = group_body
-        if c.remat == "full":
-            body = jax.checkpoint(group_body, prevent_cse=False)
-        elif c.remat == "dots":
-            body = jax.checkpoint(
-                group_body,
-                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
-                prevent_cse=False,
-            )
-        if c.scan_layers:
+        if not collecting():  # remat/scan trace the body: skip while measuring
+            if c.remat == "full":
+                body = jax.checkpoint(group_body, prevent_cse=False)
+            elif c.remat == "dots":
+                body = jax.checkpoint(
+                    group_body,
+                    policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                    prevent_cse=False,
+                )
+        if c.scan_layers and not collecting():
             h, caches = jax.lax.scan(body, h, params["layers"])
         else:
             caches_l = []

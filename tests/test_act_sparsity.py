@@ -1,0 +1,249 @@
+"""Activation-sparsity subsystem (DESIGN.md §7): measurement vs hand-built
+oracles, structural pruning round-trips through the tc kernel, and the
+energy model's monotone response to measured sparsity.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DBBFormat,
+    PARETO_DESIGN,
+    act_dbb_decode,
+    act_dbb_encode,
+    act_dbb_prune,
+    act_fmt,
+    block_nnz_histogram,
+    combine,
+    dbb_conv_costs,
+    dbb_encode,
+    dbb_gemm_costs,
+    dbb_matmul_gather_ref,
+    measure_activation,
+    model_workload,
+)
+from repro.core.act_sparsity import ActStats
+
+
+# ---------------------------------------------------------------------------
+# measure
+# ---------------------------------------------------------------------------
+
+
+class TestMeasurement:
+    def test_zero_fraction_matches_oracle(self):
+        """Plant an exact number of zeros and compare against the count."""
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(13, 7, 24)).astype(np.float32)
+        flat = x.reshape(-1)
+        kill = rng.choice(flat.size, size=500, replace=False)
+        flat[kill] = 0.0
+        x = flat.reshape(13, 7, 24)
+        st = measure_activation(jnp.asarray(x), name="oracle")
+        assert st.zero_frac == pytest.approx(500 / x.size, abs=1e-7)
+        assert st.numel == x.size and st.shape == (13, 7, 24)
+
+    def test_threshold_variant(self):
+        x = jnp.asarray([0.0, 0.05, -0.2, 1.0])
+        st = measure_activation(x, threshold=0.1)
+        assert st.zero_frac == pytest.approx(0.25)
+        assert st.near_zero_frac == pytest.approx(0.5)  # 0.0 and 0.05
+        # with no threshold the two coincide
+        st0 = measure_activation(x)
+        assert st0.near_zero_frac == st0.zero_frac
+
+    def test_block_histogram_oracle(self):
+        """Each bz-block's occupancy lands in the right histogram bin."""
+        x = np.zeros((2, 16), np.float32)
+        x[0, :3] = 1.0   # block 0: 3 nnz
+        x[0, 8:8 + 7] = 1.0  # block 1: 7 nnz
+        x[1, 0] = 1.0    # block 2: 1 nnz; block 3: 0 nnz
+        hist = np.asarray(block_nnz_histogram(jnp.asarray(x), bz=8))
+        want = np.zeros(9, np.int64)
+        want[[3, 7, 1, 0]] += 1
+        np.testing.assert_array_equal(hist, want)
+
+    def test_unblockable_feature_dim_is_nan(self):
+        st = measure_activation(jnp.ones((4, 3)))  # K=3 not bz-blockable
+        assert math.isnan(st.block_nnz_mean)
+
+    def test_combine_is_mac_weighted(self):
+        a = ActStats(name="a", numel=10, zero_frac=0.0, macs=100)
+        b = ActStats(name="b", numel=10, zero_frac=1.0, macs=300)
+        assert combine([a, b]).zero_frac == pytest.approx(0.75)
+        # numel fallback when no MAC weights are given
+        a2 = ActStats(name="a", numel=10, zero_frac=0.0)
+        b2 = ActStats(name="b", numel=30, zero_frac=1.0)
+        assert combine([a2, b2]).zero_frac == pytest.approx(0.75)
+
+
+# ---------------------------------------------------------------------------
+# gate (structural pruning) — round-trip through the tc kernel
+# ---------------------------------------------------------------------------
+
+
+class TestStructuralPruning:
+    def test_prune_satisfies_block_bound(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (32, 64))
+        fmt = DBBFormat(8, 3)
+        xp = act_dbb_prune(x, fmt)
+        counts = np.asarray((np.asarray(xp).reshape(32, 8, 8) != 0).sum(-1))
+        assert counts.max() <= 3
+        # shared pattern: the same K positions survive on every row
+        mask = np.asarray(xp != 0)
+        nz_cols = mask.any(axis=0)
+        assert (mask == nz_cols[None, :] & np.asarray(x != 0)).all()
+
+    def test_encode_decode_roundtrip_bit_exact(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (16, 64))
+        fmt = DBBFormat(8, 3)
+        xp = act_dbb_prune(x, fmt)
+        assert bool((act_dbb_decode(act_dbb_encode(x, fmt)) == xp).all())
+
+    def test_pruned_activations_through_tc_kernel_bit_exact(self):
+        """A structurally pruned activation runs the tc kernel's
+        compressed-K contraction unchanged: kernel == jnp reference,
+        bit for bit (single K-step, full output tile)."""
+        from repro.kernels import ops
+
+        key = jax.random.PRNGKey(2)
+        a = jax.nn.relu(jax.random.normal(key, (16, 64)))
+        fmt = DBBFormat(8, 3, "matrix")
+        ap = act_dbb_prune(a, fmt)
+        w = jax.random.normal(jax.random.PRNGKey(3), (64, 32))
+        dw = dbb_encode(w, fmt, prune=True)
+        got = ops.vdbb_matmul(ap, dw, bm=16, bn=32, kb=8, interpret=True)
+        want = dbb_matmul_gather_ref(ap, dw)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_ops_sparse_matmul_gates_activations(self):
+        from repro.kernels import ops
+
+        a = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(4), (16, 64)))
+        fmt = DBBFormat(8, 3, "matrix")
+        dw = dbb_encode(jax.random.normal(jax.random.PRNGKey(5), (64, 32)), fmt, prune=True)
+        afmt = DBBFormat(8, 4)
+        got = ops.sparse_matmul(a, dw, act_fmt=afmt, bm=16, bn=32, kb=8, interpret=True)
+        want = ops.vdbb_matmul(act_dbb_prune(a, afmt), dw, bm=16, bn=32, kb=8, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # no gating -> plain vdbb_matmul
+        ungated = ops.sparse_matmul(a, dw, bm=16, bn=32, kb=8, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(ungated),
+            np.asarray(ops.vdbb_matmul(a, dw, bm=16, bn=32, kb=8, interpret=True)),
+        )
+
+    def test_act_fmt_covers_measured_density(self):
+        st = ActStats(zero_frac=0.6)
+        fmt = act_fmt(st, bz=8)
+        assert fmt.nnz == 4 and fmt.group == "matrix"  # ceil(0.4 * 8) = 4
+        assert act_fmt(ActStats(zero_frac=0.0)).nnz == 8
+        assert act_fmt(ActStats(zero_frac=1.0)).nnz == 1
+
+
+# ---------------------------------------------------------------------------
+# account — cost layer and energy model take ActStats
+# ---------------------------------------------------------------------------
+
+
+class TestAccounting:
+    def test_costs_record_measured_sparsity(self):
+        fmt = DBBFormat(8, 3)
+        st = ActStats(zero_frac=0.7)
+        c = dbb_gemm_costs(64, 128, 32, fmt, act=st)
+        assert c["act_measured"] and c["act_sparsity"] == pytest.approx(0.7)
+        assert c["act_nonzero_bytes"] == int(c["act_bytes"] * 0.3)
+        c0 = dbb_gemm_costs(64, 128, 32, fmt)
+        assert not c0["act_measured"] and c0["act_sparsity"] == 0.5
+        cc = dbb_conv_costs(1, 16, 16, 64, 32, 3, 3, fmt, act=st)
+        assert cc["act_measured"]
+        assert cc["act_nonzero_bytes"] == int(cc["act_bytes_raw"] * 0.3)
+
+    def test_power_monotone_in_act_sparsity(self):
+        """More measured activation sparsity -> more clock gating -> less
+        power, monotonically; TOPS/W monotone the other way."""
+        fmt = DBBFormat(8, 3)
+        sweep = [ActStats(zero_frac=s) for s in (0.0, 0.25, 0.5, 0.75, 1.0)]
+        powers = [PARETO_DESIGN.power_mw(fmt, st) for st in sweep]
+        assert all(a > b for a, b in zip(powers, powers[1:])), powers
+        effs = [PARETO_DESIGN.tops_per_w(fmt, st) for st in sweep]
+        assert all(a < b for a, b in zip(effs, effs[1:])), effs
+        # ActStats and its scalar sparsity are interchangeable
+        assert PARETO_DESIGN.power_mw(fmt, sweep[2]) == pytest.approx(
+            PARETO_DESIGN.power_mw(fmt, 0.5)
+        )
+
+    def test_model_workload_composes_per_layer(self):
+        fmt = DBBFormat(8, 3)
+        c = dbb_conv_costs(1, 16, 16, 64, 64, 3, 3, fmt)
+        sparse, dense = ActStats(zero_frac=0.9), ActStats(zero_frac=0.1)
+        wl_sparse = model_workload(PARETO_DESIGN, [(c, fmt, sparse)] * 2)
+        wl_mixed = model_workload(PARETO_DESIGN, [(c, fmt, sparse), (c, fmt, dense)])
+        assert wl_sparse["tops_per_w"] > wl_mixed["tops_per_w"]
+        assert wl_mixed["mean_act_sparsity"] == pytest.approx(0.5)
+        # act=None falls back to what the costs dict recorded
+        c_meas = dbb_conv_costs(1, 16, 16, 64, 64, 3, 3, fmt, act=sparse)
+        wl = model_workload(PARETO_DESIGN, [(c_meas, fmt, None)])
+        assert wl["mean_act_sparsity"] == pytest.approx(0.9)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle — collection wired into both model families
+# ---------------------------------------------------------------------------
+
+
+class TestCollection:
+    def test_cnn_collect_matches_direct_measurement(self):
+        from repro.configs import smoke_cnn_config
+        from repro.models.cnn import SparseCNN
+
+        cfg = smoke_cnn_config("sparse-cnn-tiny")
+        model = SparseCNN(cfg)
+        key = jax.random.PRNGKey(0)
+        params = model.compress(model.init(key))
+        x = jax.random.normal(key, (2, cfg.image_size, cfg.image_size, 3))
+        logits, stats = model.apply(params, x, collect_act_stats=True)
+        # collection must not perturb the forward
+        assert bool((model(params, x) == logits).all())
+        assert len(stats) == len(model.layers())
+        # stem input is a dense random image; interior layers are post-ReLU
+        assert stats[0].zero_frac == pytest.approx(float(jnp.mean(x == 0)))
+        assert stats[1].zero_frac > 0.3, "post-ReLU activations should be zero-heavy"
+        assert all(s.macs > 0 for s in stats)
+        # per-layer stats drive per-layer costs
+        layers = model.layer_costs(2, stats=stats)
+        assert all(c["act_measured"] for _, c, _ in layers)
+        assert layers[1][1]["act_sparsity"] == pytest.approx(stats[1].zero_frac)
+
+    def test_lm_collect_smoke(self):
+        from repro.configs import make_batch, smoke_config
+        from repro.models import LM
+
+        cfg = smoke_config("starcoder2-7b")
+        m = LM(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = make_batch(cfg, batch=2, seq=16)
+        logits, stats = m.forward(params, batch, collect_act_stats=True)
+        assert len(stats) > 0 and all(isinstance(s, ActStats) for s in stats)
+        assert sum(s.macs for s in stats) > 0
+        # collection bypasses scan/remat; against the same unrolled path it
+        # must not perturb the forward at all
+        import dataclasses
+
+        m_unrolled = LM(dataclasses.replace(cfg, scan_layers=False))
+        plain = m_unrolled.forward(params, batch)
+        assert bool((plain == logits).all())
+        combined = combine(list(stats))
+        assert 0.0 <= combined.zero_frac <= 1.0
+
+    def test_collector_skips_traced_values(self):
+        from repro.core.act_sparsity import collect_activations, record_activation
+
+        with collect_activations() as col:
+            jax.jit(lambda x: (record_activation(x), x * 2)[1])(jnp.ones(4))
+            record_activation(jnp.zeros(4), name="eager")
+        assert [s.name for s in col.stats] == ["eager"]
+        assert col.stats[0].zero_frac == 1.0

@@ -4,7 +4,10 @@ software artifact itself —
 1. time-unrolled occupancy: executed FLOPs (compiled HLO) scale ~ nnz/bz
    at every sparsity level (the 'variable NNZ, constant utilization' claim);
 2. compressed stream: weight operand bytes scale as (nnz*8 + bz/8)/
-   (bz*8) of dense (values + bitmask), for both tc and bw layouts.
+   (bz*8) of dense (values + bitmask), for both tc and bw layouts;
+3. int8 vs fp32 (DESIGN.md §8): the quantized datapath halves the
+   compressed-K operand bytes vs bf16 (4x vs fp32) at matching results
+   (max |deviation| reported against the fp32 path).
 
 Wall time on CPU (jnp reference path) is reported for completeness;
 TPU-representative performance is the §Roofline analysis.
@@ -14,6 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
 from repro.core.vdbb import DBBFormat, dbb_encode, dbb_gemm_costs
 from repro.models.common import apply_linear
 from repro.xla_utils import cost_analysis_dict
@@ -49,4 +53,32 @@ def run(report):
             t_us,
             f"hlo_flops {c['flops']:.3g} (dense x{c['flops']/(2*m*k*n):.2f}) "
             f"wbytes x{costs['weight_compression']:.2f} speedup {costs['speedup']:.1f}",
+        )
+
+    # int8 vs fp32 rows (§8): same GEMM through the quantized integer path.
+    for nnz in (4, 2):
+        fmt = DBBFormat(8, nnz, "matrix")
+        dw = dbb_encode(w, fmt, prune=True)
+        qw = quant.quantize_dbb(dw)
+        s_a = quant.dynamic_act_scale(a)
+
+        def q_fn(a, qw, s_a):
+            return quant.quant_matmul_ref(quant.quantize(a, s_a), qw, s_a)
+
+        fn = jax.jit(q_fn)
+        fn(a, qw, s_a).block_until_ready()
+        t0 = time.time()
+        for _ in range(5):
+            y_q = fn(a, qw, s_a).block_until_ready()
+        t_us = (time.time() - t0) / 5 * 1e6
+        y_fp = apply_linear(a, dw)
+        dev = float(jnp.max(jnp.abs(y_q - y_fp)))
+        c8 = dbb_gemm_costs(m, k, n, fmt, bits=8, act_bits=8)
+        c16 = dbb_gemm_costs(m, k, n, fmt, bits=16, act_bits=16)
+        report(
+            f"vdbb_matmul/int8_nnz{nnz}_8",
+            t_us,
+            f"operand bytes int8/bf16 w x{c8['weight_bytes']/c16['weight_bytes']:.2f} "
+            f"act x{c8['act_bytes']/c16['act_bytes']:.2f} "
+            f"max|int8-fp32| {dev:.4f}",
         )

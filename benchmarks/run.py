@@ -31,6 +31,7 @@ BENCHES = [
     ("im2col (IM2COL unit, Fig 8)", "benchmarks.bench_im2col", False),
     ("sparse_conv (IM2COL x VDBB fused)", "benchmarks.bench_sparse_conv", False),
     ("kernels (VDBB matmul)", "benchmarks.bench_kernels", False),
+    ("quant (INT8 datapath, DESIGN §8)", "benchmarks.bench_quant", True),
     ("roofline (EXPERIMENTS §Roofline)", "benchmarks.roofline", True),
 ]
 

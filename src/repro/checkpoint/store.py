@@ -34,7 +34,19 @@ def _flatten(tree):
     return flat, treedef
 
 
-_BITCAST = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8, "float8_e5m2": np.uint8}
+# Dtypes numpy's npz can't store natively survive as same-width unsigned
+# bitcasts (restored through ml_dtypes via the manifest's dtype record).
+# int8 is npz-native and passes through untouched — QuantDBBWeight leaves
+# (int8 values/indices + fp32 scales) ride the ordinary path and round-trip
+# exactly (tests/test_quant.py); int4/uint4 (1 byte per element in
+# ml_dtypes' unpacked layout) need the bitcast like the fp8 formats do.
+_BITCAST = {
+    "bfloat16": np.uint16,
+    "float8_e4m3fn": np.uint8,
+    "float8_e5m2": np.uint8,
+    "int4": np.uint8,
+    "uint4": np.uint8,
+}
 
 
 def save(ckpt_dir, step: int, tree, *, extra: Optional[dict] = None) -> pathlib.Path:

@@ -29,6 +29,19 @@ from repro.core.act_sparsity import (  # noqa: F401
     record_activation,
     zero_fraction,
 )
+from repro.core.quant import (  # noqa: F401
+    QMAX,
+    QuantDBBWeight,
+    act_scale_from_stats,
+    dequantize,
+    dequantize_dbb,
+    dynamic_act_scale,
+    quant_conv_ref,
+    quant_matmul_ref,
+    quantize,
+    quantize_dbb,
+    weight_scales,
+)
 from repro.core.sparse_linear import DBBLinear, PruneSchedule  # noqa: F401
 from repro.core.sparse_conv import DBBConv2d  # noqa: F401
 from repro.core.energy_model import (  # noqa: F401

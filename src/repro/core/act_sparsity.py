@@ -113,6 +113,7 @@ class ActStats:
     bz: int = DEFAULT_BZ
     block_nnz_mean: float = float("nan")  # NaN when K % bz != 0
     macs: int = 0
+    absmax: float = 0.0  # max |x|: the INT8 calibration range (DESIGN.md §8)
 
     @property
     def sparsity(self) -> float:
@@ -152,7 +153,7 @@ def measure_activation(
     return ActStats(
         name=name, shape=tuple(x.shape), numel=int(x.size), zero_frac=zf,
         near_zero_frac=nf, threshold=threshold, bz=bz, block_nnz_mean=bnm,
-        macs=int(macs),
+        macs=int(macs), absmax=float(jnp.max(jnp.abs(x))),
     )
 
 
@@ -185,6 +186,7 @@ def combine(stats: Sequence[ActStats], name: str = "combined") -> ActStats:
             if bnms else float("nan")
         ),
         macs=sum(s.macs for s in stats),
+        absmax=max(s.absmax for s in stats),  # calibration range is a max
     )
 
 

@@ -1,0 +1,183 @@
+"""INT8 quantization for the VDBB datapath (DESIGN.md §8).
+
+The ASIC the paper evaluates is an INT8 machine — every Table IV/V number
+and every `energy_model.UNIT` cost is normalized to one INT8 MAC — so the
+functional model gets the same numerics: int8 operands into the MACs, an
+int32 output-stationary accumulator, and a dequantization at the
+accumulator flush. This module owns the number format; the kernels
+(`repro.kernels`) own the int8 datapath it feeds.
+
+Scheme (standard symmetric / zero-point-free, the hardware-friendly choice):
+
+* **Weights** — per-output-channel symmetric:
+  ``scale[n] = max|W[:, n]| / 127``, ``Wq = round(W / scale)`` in
+  ``[-127, 127]``. Quantization rides the *compressed* `DBBWeight` layout:
+  :class:`QuantDBBWeight` keeps the (nb, nnz, N) int8 values next to the
+  unchanged int8 position indices, so the compressed stream the kernels
+  read is bytes-per-value 1 instead of 4 — the paper's storage format
+  bit-for-bit (int8 values + positions).
+
+* **Activations** — per-tensor symmetric, calibrated from the PR-2
+  activation-statistics pipeline: ``measure_activation`` records the
+  tensor's ``absmax``, and :func:`act_scale_from_stats` turns the stats
+  collected by ``SparseCNN.apply(collect_act_stats=True)`` into the static
+  scale ``absmax / 127``. Without calibration, :func:`dynamic_act_scale`
+  computes the scale from the live batch (dynamic quantization).
+
+* **Accumulation** — exact int32 (int8·int8 products summed over K;
+  overflow-free for K < 2^31/127² ≈ 133k). The float result is recovered
+  on the accumulator flush as ``acc_int32 · (act_scale · w_scale[n])`` —
+  one fused multiply per output element, exactly where the hardware's
+  requantizer sits.
+
+All functions are pure and jit-safe. The integer references here
+(:func:`quant_matmul_ref`, :func:`quant_conv_ref`) are the oracles the
+int8 Pallas kernels are tested bit-exactly against.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vdbb import (
+    DBBFormat,
+    DBBWeight,
+    dbb_decode,
+)
+
+QMAX = 127  # symmetric int8: [-127, 127]; -128 unused so negation is safe
+
+
+# ---------------------------------------------------------------------------
+# Scales
+# ---------------------------------------------------------------------------
+
+
+def weight_scales(values: jax.Array) -> jax.Array:
+    """Per-output-channel symmetric scales from compressed (nb, nnz, N)
+    values (all non-zeros are present in the compressed layout, so the
+    per-column max over it equals the dense per-column max)."""
+    amax = jnp.max(jnp.abs(values.astype(jnp.float32)), axis=(0, 1))  # (N,)
+    return jnp.maximum(amax, 1e-12) / QMAX
+
+
+def dynamic_act_scale(x: jax.Array) -> jax.Array:
+    """Per-tensor symmetric scale from the live batch (dynamic quant)."""
+    return jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12) / QMAX
+
+
+def act_scale_from_stats(stats) -> float:
+    """Static per-tensor scale from calibration :class:`ActStats` —
+    the measure→gate→account pipeline doubles as the calibration pass
+    (``SparseCNN.apply(collect_act_stats=True)`` records ``absmax``)."""
+    amax = float(getattr(stats, "absmax"))
+    if not amax > 0.0:
+        raise ValueError(f"calibration stats carry no absmax: {stats!r}")
+    return amax / QMAX
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize
+# ---------------------------------------------------------------------------
+
+
+def quantize(x: jax.Array, scale) -> jax.Array:
+    """Symmetric round-to-nearest int8: clip(round(x / scale)) in ±QMAX.
+    ``scale`` broadcasts (scalar for activations, (N,) for weights)."""
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantDBBWeight:
+    """INT8-quantized compressed DBB weight.
+
+    values:  (nb, nnz, N) int8 — quantized non-zeros, same layout as
+             ``DBBWeight.values``.
+    indices: (nb, nnz, NG) int8 — intra-block positions, unchanged.
+    scales:  (N,) fp32 — per-output-channel dequantization scales.
+    fmt / shape: static, as on :class:`DBBWeight`.
+    """
+
+    values: jax.Array
+    indices: jax.Array
+    scales: jax.Array
+    fmt: DBBFormat
+    shape: tuple
+
+    def tree_flatten(self):
+        return (self.values, self.indices, self.scales), (self.fmt, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], children[2], aux[0], aux[1])
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def as_dbb(self) -> DBBWeight:
+        """The int8 compressed weight viewed as a plain DBBWeight (what the
+        dtype-dispatching kernels consume; scales ride separately)."""
+        return DBBWeight(self.values, self.indices, self.fmt, self.shape)
+
+    def nbytes_compressed(self) -> int:
+        """Stored bytes: int8 values + bitmask + fp32 scales."""
+        vb = int(np.prod(self.values.shape))  # 1 byte per value
+        nb, _, ng = self.indices.shape
+        mask_bits = nb * ng * self.fmt.bz
+        return vb + mask_bits // 8 + int(np.prod(self.scales.shape)) * 4
+
+
+def quantize_dbb(dw: DBBWeight) -> QuantDBBWeight:
+    """Symmetric per-output-channel quantization of a compressed weight."""
+    if jnp.issubdtype(dw.values.dtype, jnp.integer):
+        raise ValueError(f"weight already integer: {dw.values.dtype}")
+    scales = weight_scales(dw.values)
+    qvals = quantize(dw.values, scales[None, None, :])
+    return QuantDBBWeight(qvals, dw.indices, scales, dw.fmt, dw.shape)
+
+
+def dequantize_dbb(qw: QuantDBBWeight) -> DBBWeight:
+    """fp32 DBBWeight carrying the (lossy) round-tripped values."""
+    vals = dequantize(qw.values, qw.scales[None, None, :])
+    return DBBWeight(vals, qw.indices, qw.fmt, qw.shape)
+
+
+# ---------------------------------------------------------------------------
+# Integer references (oracles for the int8 kernels; pure jnp)
+# ---------------------------------------------------------------------------
+
+
+def int_matmul_ref(aq: jax.Array, wq_dense: jax.Array) -> jax.Array:
+    """Exact int32 GEMM of int8 operands — the accumulator the hardware
+    (and the Pallas int8 kernels) produce before requantization."""
+    return jnp.matmul(aq.astype(jnp.int32), wq_dense.astype(jnp.int32))
+
+
+def quant_matmul_ref(aq: jax.Array, qw: QuantDBBWeight, act_scale) -> jax.Array:
+    """int8 A × quantized compressed W → fp32, via the decoded dense int8
+    weight: int32-exact accumulate, dequant on the (conceptual) flush."""
+    acc = int_matmul_ref(aq, dbb_decode(qw.as_dbb()))
+    return acc.astype(jnp.float32) * (act_scale * qw.scales)[None, :]
+
+
+def quant_conv_ref(
+    xq: jax.Array, qw: QuantDBBWeight, kh: int, kw: int, act_scale,
+    *, stride=1, padding="SAME",
+) -> jax.Array:
+    """int8 NHWC conv oracle: the exact-int32 accumulator of
+    ``kernels.ref.sparse_conv_int_ref`` + dequant. Matches the fused int8
+    conv kernels."""
+    from repro.kernels.ref import sparse_conv_int_ref
+
+    acc = sparse_conv_int_ref(xq, qw.as_dbb(), kh, kw, stride=stride, padding=padding)
+    return acc.astype(jnp.float32) * (act_scale * qw.scales)[None, None, None, :]

@@ -20,6 +20,13 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant import (
+    QuantDBBWeight,
+    dynamic_act_scale,
+    quant_conv_ref,
+    quantize as quantize_array,
+    quantize_dbb,
+)
 from repro.core.sparse_linear import PruneSchedule
 from repro.core.vdbb import (
     DBBFormat,
@@ -83,7 +90,9 @@ class DBBConv2d:
 
     def __call__(self, params: dict, x: jax.Array) -> jax.Array:
         w = params["w"]
-        if isinstance(w, DBBWeight):
+        if isinstance(w, QuantDBBWeight):
+            y = self._quantized_conv(x, w, params.get("aq"))
+        elif isinstance(w, DBBWeight):
             y = self._compressed_conv(x, w)
         else:
             y = jax.lax.conv_general_dilated(
@@ -113,10 +122,26 @@ class DBBConv2d:
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
         )
 
+    def _quantized_conv(self, x: jax.Array, qw: QuantDBBWeight, aq) -> jax.Array:
+        """INT8 serving conv: per-tensor act quant (calibrated ``aq`` or
+        dynamic), int8 fused kernel / integer reference, fp32 out."""
+        s_a = dynamic_act_scale(x) if aq is None else aq
+        if self.kernel_mode == "pallas":
+            from repro.kernels import ops  # deferred: kernels are optional
+
+            return ops.quant_conv(
+                x, qw, self.kh, self.kw, s_a,
+                stride=_pair(self.stride), padding=self.padding,
+            )
+        return quant_conv_ref(
+            quantize_array(x, s_a), qw, self.kh, self.kw, s_a,
+            stride=_pair(self.stride), padding=self.padding,
+        )
+
     # ------------------------------------------------------------------
     def constrain(self, params: dict, step=None, schedule: Optional[PruneSchedule] = None) -> dict:
         """Project the dense weight onto the (possibly annealed) constraint."""
-        if self.fmt.is_dense or isinstance(params["w"], DBBWeight):
+        if self.fmt.is_dense or isinstance(params["w"], (DBBWeight, QuantDBBWeight)):
             return params
         if schedule is None or step is None:
             w = self._project(params["w"], self.fmt)
@@ -130,9 +155,25 @@ class DBBConv2d:
         return dict(params, w=w)
 
     def compress_params(self, params: dict) -> dict:
-        if self.fmt.is_dense:
+        if self.fmt.is_dense or isinstance(params["w"], (DBBWeight, QuantDBBWeight)):
             return params
         return dict(params, w=dbb_encode_conv(params["w"], self.fmt, prune=True))
+
+    def quantize(self, params: dict, act_scale=None) -> dict:
+        """Convert compressed params to the INT8 serving layout (§8);
+        same contract as :meth:`DBBLinear.quantize` (dense layers — the
+        stem — stay fp, like the paper's uncompressed first layer)."""
+        w = params["w"]
+        if isinstance(w, QuantDBBWeight):  # already int8: re-calibrate only
+            if act_scale is None:
+                return params
+            return dict(params, aq=jnp.asarray(act_scale, jnp.float32))
+        if not isinstance(w, DBBWeight):  # dense layer stays fp
+            return params
+        out = dict(params, w=quantize_dbb(w))
+        if act_scale is not None:
+            out["aq"] = jnp.asarray(act_scale, jnp.float32)
+        return out
 
     # ------------------------------------------------------------------
     def out_hw(self, h: int, w: int) -> tuple:

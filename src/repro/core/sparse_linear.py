@@ -8,7 +8,11 @@ A progressive schedule anneals nnz from bz down to the target.
 Serving: `compress_params()` converts the dense weight to the compressed
 DBBWeight layout; the forward pass then runs the compressed matmul
 (Pallas kernel on TPU, jnp reference elsewhere), consuming nnz/bz of the
-dense weight bandwidth — the VDBB win.
+dense weight bandwidth — the VDBB win. `quantize()` (DESIGN.md §8)
+further converts compressed params to the ASIC's INT8 numerics: int8
+values + per-output-channel scales (`QuantDBBWeight`), per-tensor
+activation quantization (calibrated or dynamic), exact int32
+accumulation, dequantization at the accumulator flush.
 """
 from __future__ import annotations
 
@@ -18,6 +22,13 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant import (
+    QuantDBBWeight,
+    dynamic_act_scale,
+    quant_matmul_ref,
+    quantize as quantize_array,
+    quantize_dbb,
+)
 from repro.core.vdbb import (
     DBBFormat,
     DBBWeight,
@@ -72,7 +83,9 @@ class DBBLinear:
     # ------------------------------------------------------------------
     def __call__(self, params: dict, x: jax.Array) -> jax.Array:
         w = params["w"]
-        if isinstance(w, DBBWeight):
+        if isinstance(w, QuantDBBWeight):
+            y = self._quantized_matmul(x, w, params.get("aq"))
+        elif isinstance(w, DBBWeight):
             y = self._compressed_matmul(x, w)
         else:
             y = jnp.matmul(x, w.astype(x.dtype))
@@ -93,10 +106,24 @@ class DBBLinear:
             y2 = jnp.matmul(x2, dbb_decode(w).astype(x.dtype))
         return y2.reshape(*lead, self.out_features)
 
+    def _quantized_matmul(self, x: jax.Array, qw: QuantDBBWeight, aq) -> jax.Array:
+        """INT8 serving matmul: per-tensor act quant (calibrated ``aq`` or
+        dynamic), int8 kernel / integer reference, fp32 out (bias after)."""
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        s_a = dynamic_act_scale(x2) if aq is None else aq
+        if self.kernel_mode == "pallas":
+            from repro.kernels import ops  # deferred: kernels are optional
+
+            y2 = ops.quant_matmul(x2, qw, s_a)
+        else:
+            y2 = quant_matmul_ref(quantize_array(x2, s_a), qw, s_a)
+        return y2.reshape(*lead, self.out_features)
+
     # ------------------------------------------------------------------
     def constrain(self, params: dict, step=None, schedule: Optional[PruneSchedule] = None) -> dict:
         """Project the dense weight onto the (possibly annealed) constraint."""
-        if self.fmt.is_dense or isinstance(params["w"], DBBWeight):
+        if self.fmt.is_dense or isinstance(params["w"], (DBBWeight, QuantDBBWeight)):
             return params
         if schedule is None or step is None:
             w = dbb_prune(params["w"], self.fmt)
@@ -113,9 +140,30 @@ class DBBLinear:
         return dict(params, w=w)
 
     def compress_params(self, params: dict) -> dict:
-        if self.fmt.is_dense:
+        if self.fmt.is_dense or isinstance(params["w"], (DBBWeight, QuantDBBWeight)):
             return params
         return dict(params, w=dbb_encode(params["w"], self.fmt, prune=True))
+
+    def quantize(self, params: dict, act_scale=None) -> dict:
+        """Convert compressed params to the INT8 serving layout (§8).
+
+        ``act_scale``: static per-tensor activation scale from calibration
+        (``quant.act_scale_from_stats``); None keeps activation
+        quantization dynamic (scale from each live batch). Dense
+        (non-compressed) layers are returned unchanged — they stay fp, like
+        the paper's uncompressed stem.
+        """
+        w = params["w"]
+        if isinstance(w, QuantDBBWeight):  # already int8: re-calibrate only
+            if act_scale is None:
+                return params
+            return dict(params, aq=jnp.asarray(act_scale, jnp.float32))
+        if not isinstance(w, DBBWeight):  # dense layer stays fp
+            return params
+        out = dict(params, w=quantize_dbb(w))
+        if act_scale is not None:
+            out["aq"] = jnp.asarray(act_scale, jnp.float32)
+        return out
 
     def param_specs(self, k_axis: str, n_axis: str) -> dict:
         """Logical sharding axes for dense or compressed layouts."""

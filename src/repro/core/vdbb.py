@@ -292,11 +292,18 @@ def _act_sparsity_frac(act) -> Optional[float]:
 
 
 def dbb_gemm_costs(m: int, k: int, n: int, fmt: DBBFormat, bits: int = 8,
-                   *, act=None) -> dict:
+                   *, act=None, act_bits: Optional[int] = None,
+                   out_bits: int = 32) -> dict:
     """Analytic cost of one M×K×N GEMM under VDBB, paper-style accounting.
 
     'cycles' follows the time-unrolled occupancy: nnz cycles per block
     instead of bz. 'weight_bytes' is the compressed stream (values+mask).
+
+    ``bits`` / ``act_bits`` are the operand widths (weight / activation;
+    ``act_bits`` defaults to ``bits``): 8 is the ASIC's INT8 datapath
+    (DESIGN.md §8), 16 models a bf16 run of the same kernels — int8 halves
+    every operand stream relative to bf16. ``out_bits`` is the accumulator
+    flush width (32 for both the int32 and fp32 accumulators).
 
     ``act`` (optional) is the layer's activation sparsity — a scalar or a
     measured :class:`repro.core.act_sparsity.ActStats`. When given, the
@@ -307,6 +314,7 @@ def dbb_gemm_costs(m: int, k: int, n: int, fmt: DBBFormat, bits: int = 8,
     otherwise the paper's 50% assumption is recorded with
     ``act_measured=False``.
     """
+    act_bits = bits if act_bits is None else act_bits
     nb, rem = divmod(k, fmt.bz)
     if rem and not fmt.is_dense:
         raise ValueError(f"K={k} not divisible by block size bz={fmt.bz}")
@@ -316,8 +324,8 @@ def dbb_gemm_costs(m: int, k: int, n: int, fmt: DBBFormat, bits: int = 8,
     # the C=3 stem) runs — and stores — its rem positions uncompressed.
     hw_macs = m * (nb * fmt.nnz + rem) * n
     wbytes = (nb * (fmt.nnz * bits + fmt.bz) + rem * (bits + 1)) * n / 8
-    abytes = m * k * bits / 8
-    obytes = m * n * 4  # int32/fp32 accumulators
+    abytes = m * k * act_bits / 8
+    obytes = m * n * out_bits / 8  # int32/fp32 accumulators
     act_sp = _act_sparsity_frac(act)
     measured = hasattr(act, "sparsity")
     if act_sp is None:
@@ -327,6 +335,8 @@ def dbb_gemm_costs(m: int, k: int, n: int, fmt: DBBFormat, bits: int = 8,
         effective_ops=2 * eff_macs,
         executed_macs=hw_macs,
         speedup=fmt.bz / fmt.nnz,
+        weight_bits=bits,
+        act_bits=act_bits,
         weight_bytes=int(wbytes),
         act_bytes=int(abytes),
         out_bytes=int(obytes),
@@ -351,13 +361,16 @@ def dbb_conv_costs(
     stride=1,
     padding="SAME",
     bits: int = 8,
+    act_bits: Optional[int] = None,
     im2col_unit: bool = True,
     act=None,
 ) -> dict:
     """Analytic cost of one NHWC conv under VDBB + hardware IM2COL.
 
     ``act``: this layer's activation sparsity (scalar or measured
-    ``ActStats``), forwarded to :func:`dbb_gemm_costs`.
+    ``ActStats``), forwarded to :func:`dbb_gemm_costs`; ``bits`` /
+    ``act_bits`` are the weight / activation operand widths (int8 vs bf16
+    streams), also forwarded.
 
     The conv is the M×K×N GEMM with M = n·ho·wo, K = kh·kw·c, N = f
     (exactly what the fused kernel executes), composed with the IM2COL
@@ -378,9 +391,10 @@ def dbb_conv_costs(
 
     _, _, (ho, wo) = conv_geometry(h, w, kh, kw, (sh, sw), padding)
     m, k = n * ho * wo, kh * kw * c
-    costs = dbb_gemm_costs(m, k, f, fmt, bits, act=act)
-    raw_act = n * h * w * c * bits / 8
-    expanded_act = m * k * bits / 8
+    costs = dbb_gemm_costs(m, k, f, fmt, bits, act=act, act_bits=act_bits)
+    act_bits = costs["act_bits"]
+    raw_act = n * h * w * c * act_bits / 8
+    expanded_act = m * k * act_bits / 8
     magnification = expanded_act / raw_act
     costs.update(
         out_hw=(ho, wo),

@@ -3,8 +3,8 @@
 All kernels in this repo are instances of one scheme — the systolic
 array's *output-stationary* dataflow (DESIGN.md §2, §6):
 
-* a fp32 accumulator tile lives in VMEM scratch for the lifetime of one
-  output tile;
+* an accumulator tile (fp32, or exact int32 on the int8 operand path —
+  DESIGN.md §8) lives in VMEM scratch for the lifetime of one output tile;
 * the reduction (K) dimension is the *innermost* grid axis, so the
   accumulator is initialized on the first K step and flushed to the
   output ref on the last;
@@ -44,15 +44,29 @@ def resolve_tile(dim: int, tile: int, name: str = "tile") -> int:
     return t
 
 
-def os_accumulate(acc_ref, o_ref, contribution, *, grid_axis: int):
+def acc_dtype_for(operand_dtype) -> jnp.dtype:
+    """Accumulator dtype for an operand dtype: exact int32 for integer
+    (int8) operands, fp32 otherwise — the two accumulators the hardware
+    datapath has (DESIGN.md §8)."""
+    if jnp.issubdtype(operand_dtype, jnp.integer):
+        return jnp.dtype(jnp.int32)
+    return jnp.dtype(jnp.float32)
+
+
+def os_accumulate(acc_ref, o_ref, contribution, *, grid_axis: int, scale=None):
     """Output-stationary accumulation step.
 
     Zeroes ``acc_ref`` on the first step of the reduction grid axis
-    (``grid_axis``, the innermost one), adds ``contribution`` (fp32), and
-    flushes to ``o_ref`` on the last step. ``contribution`` must have
-    ``acc_ref``'s shape; ``o_ref`` may have a different (same-size) shape —
-    e.g. a conv output tile with leading batch dim — and the accumulator is
-    reshaped on store.
+    (``grid_axis``, the innermost one), adds ``contribution`` (fp32 or
+    int32, matching the scratch), and flushes to ``o_ref`` on the last
+    step. ``contribution`` must have ``acc_ref``'s shape; ``o_ref`` may
+    have a different (same-size) shape — e.g. a conv output tile with
+    leading batch dim — and the accumulator is reshaped on store.
+
+    ``scale`` (optional, fp32, broadcastable to the accumulator tile —
+    e.g. a (1, bn) per-output-column row) is the dequantization fused into
+    the flush: the int32 accumulator is multiplied once per output element
+    exactly where the hardware's requantizer sits (DESIGN.md §8).
     """
 
     @pl.when(pl.program_id(grid_axis) == 0)
@@ -63,7 +77,10 @@ def os_accumulate(acc_ref, o_ref, contribution, *, grid_axis: int):
 
     @pl.when(pl.program_id(grid_axis) == pl.num_programs(grid_axis) - 1)
     def _store():
-        o_ref[...] = acc_ref[...].reshape(o_ref.shape).astype(o_ref.dtype)
+        acc = acc_ref[...]
+        if scale is not None:
+            acc = acc.astype(jnp.float32) * scale
+        o_ref[...] = acc.reshape(o_ref.shape).astype(o_ref.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -161,15 +178,17 @@ def os_matmul_call(
     k_steps: int,
     in_specs: Sequence[pl.BlockSpec],
     out_dtype,
+    acc_dtype=jnp.float32,
     interpret: bool | None = None,
 ):
     """Launch an output-stationary (M, N) matmul-shaped kernel.
 
     Builds the K-innermost grid ``(m//bm, n//bn, k_steps)``, the ``(bm, bn)``
-    output BlockSpec and the fp32 VMEM accumulator scratch, and invokes
-    ``pl.pallas_call``. The kernel receives ``(*operand_refs, o_ref,
-    acc_ref)`` and is expected to compute one K-step contribution and hand
-    it to :func:`os_accumulate` with ``grid_axis=2``.
+    output BlockSpec and the VMEM accumulator scratch (fp32, or int32 for
+    the int8 operand path — ``acc_dtype``), and invokes ``pl.pallas_call``.
+    The kernel receives ``(*operand_refs, o_ref, acc_ref)`` and is expected
+    to compute one K-step contribution and hand it to :func:`os_accumulate`
+    with ``grid_axis=2``.
     """
     grid = (m // bm, n // bn, k_steps)
     return pl.pallas_call(
@@ -178,6 +197,6 @@ def os_matmul_call(
         in_specs=list(in_specs),
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
         interpret=resolve_interpret(interpret),
     )(*operands)

@@ -76,7 +76,9 @@ def _im2col_conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, kw, sh, sw, bh, bw):
     t = pl.program_id(2)
     patch = core.conv_patch(x_ref[0], t // kw, t % kw, bh=bh, bw=bw, sh=sh, sw=sw)
     contrib = jax.lax.dot(
-        patch, w_ref[0].astype(patch.dtype), preferred_element_type=jnp.float32
+        patch,
+        w_ref[0].astype(patch.dtype),
+        preferred_element_type=core.acc_dtype_for(patch.dtype),
     )
     core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2)
 
@@ -101,6 +103,8 @@ def im2col_conv(
     bf = core.resolve_tile(f, bf, "bf")
     w3 = w.reshape(kh * kw, c, f)
     grid = (n * g["th"] * g["tw"], f // bf, kh * kw)
+    acc_dtype = core.acc_dtype_for(x.dtype)  # int32 on the int8 path (§8)
+    out_dtype = jnp.int32 if acc_dtype == jnp.int32 else x.dtype
     return pl.pallas_call(
         functools.partial(
             _im2col_conv_kernel, kw=kw, sh=g["sh"], sw=g["sw"], bh=g["bh"], bw=g["bw"]
@@ -111,7 +115,7 @@ def im2col_conv(
             pl.BlockSpec((1, c, bf), lambda p, j, t: (t, 0, j)),
         ],
         out_specs=conv_out_spec(g, bf),
-        out_shape=jax.ShapeDtypeStruct((n, g["ho"], g["wo"], f), x.dtype),
-        scratch_shapes=[pltpu.VMEM((g["bh"] * g["bw"], bf), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((n, g["ho"], g["wo"], f), out_dtype),
+        scratch_shapes=[pltpu.VMEM((g["bh"] * g["bw"], bf), acc_dtype)],
         interpret=core.resolve_interpret(interpret),
     )(xt, w3)

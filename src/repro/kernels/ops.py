@@ -3,6 +3,13 @@
 ``interpret`` defaults to True unless a real TPU backend is present (see
 kernels/core.py), so the same call sites validate on CPU and run compiled
 on TPU.
+
+Dtype dispatch (DESIGN.md §8): the same entry points accept fp32/bf16 or
+int8 operands. Integer operands run the int8 datapath — exact int32 OS
+accumulation — and return the raw int32 accumulator; the quantized
+end-to-end path (`quant_matmul` / `quant_conv`) additionally quantizes the
+fp activation per-tensor and fuses the dequantization into the accumulator
+flush via the kernels' ``scales`` operand.
 """
 from __future__ import annotations
 
@@ -11,6 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant import QuantDBBWeight, dynamic_act_scale, quantize
 from repro.core.vdbb import DBBFormat, DBBWeight
 from repro.kernels import core
 from repro.kernels import im2col_conv as _im2col
@@ -20,6 +28,20 @@ from repro.kernels import vdbb_matmul as _vm
 
 def _default_interpret() -> bool:
     return core.default_interpret()
+
+
+def _matmul_dispatch(a, w, scales, bm, bn, kb, interpret):
+    """tc vs bw on the weight's pattern-sharing mode (shared by the fp,
+    raw-int8 and quantized entry points)."""
+    n = w.shape[1]
+    kw = dict(scales=scales, bm=bm, bn=bn, kb=kb, interpret=interpret)
+    if w.fmt.group_size(n) == n:
+        return _vm.vdbb_matmul_tc(a, w.values, w.indices[:, :, 0], w.fmt, **kw)
+    if w.fmt.group_size(n) != 1:
+        # grouped-but-not-matrix: expand indices per column, use bw kernel.
+        idx = jnp.repeat(w.indices, w.fmt.group_size(n), axis=2)
+        return _vm.vdbb_matmul_bw(a, w.values, idx, w.fmt, **kw)
+    return _vm.vdbb_matmul_bw(a, w.values, w.indices, w.fmt, **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "kb", "interpret"))
@@ -33,20 +55,36 @@ def vdbb_matmul(
     interpret: bool | None = None,
 ) -> jax.Array:
     """A (M, K) @ compressed DBB W (K, N) -> (M, N). Dispatches tc vs bw on
-    the weight's pattern-sharing mode."""
+    the weight's pattern-sharing mode, and on operand dtype: int8 operands
+    run the int32-accumulator datapath and return the raw int32
+    accumulator (quantized end-to-end: :func:`quant_matmul`)."""
     interpret = _default_interpret() if interpret is None else interpret
-    n = w.shape[1]
-    if w.fmt.group_size(n) == n:
-        return _vm.vdbb_matmul_tc(
-            a, w.values, w.indices[:, :, 0], w.fmt, bm=bm, bn=bn, kb=kb, interpret=interpret
-        )
-    if w.fmt.group_size(n) != 1:
-        # grouped-but-not-matrix: expand indices per column, use bw kernel.
-        idx = jnp.repeat(w.indices, w.fmt.group_size(n), axis=2)
-        return _vm.vdbb_matmul_bw(a, w.values, idx, w.fmt, bm=bm, bn=bn, kb=kb, interpret=interpret)
-    return _vm.vdbb_matmul_bw(
-        a, w.values, w.indices, w.fmt, bm=bm, bn=bn, kb=kb, interpret=interpret
-    )
+    return _matmul_dispatch(a, w, None, bm, bn, kb, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "kb", "interpret"))
+def quant_matmul(
+    x: jax.Array,
+    qw: QuantDBBWeight,
+    act_scale: jax.Array | None = None,
+    *,
+    bm: int = 128,
+    bn: int = 256,
+    kb: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """fp X (M, K) × int8-quantized compressed W -> fp32 (M, N).
+
+    Quantizes the activation per-tensor (``act_scale`` from calibration,
+    or dynamic from the live batch when None), runs the int8 kernel with
+    the exact int32 accumulator, and dequantizes on the accumulator flush
+    with the fused per-output-column ``act_scale · w_scale[n]``.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    s_a = dynamic_act_scale(x) if act_scale is None else act_scale
+    xq = quantize(x, s_a)
+    scales = s_a * qw.scales
+    return _matmul_dispatch(xq, qw.as_dbb(), scales, bm, bn, kb, interpret)
 
 
 def sparse_matmul(
@@ -114,9 +152,46 @@ def sparse_conv(
 ) -> jax.Array:
     """Fused IM2COL × VDBB sparse conv over a compressed DBB conv weight
     (K = kh·kw·C along the reduction). Dispatches tc vs bw on the weight's
-    pattern-sharing mode — the paper's full datapath in one call."""
+    pattern-sharing mode — the paper's full datapath in one call. int8
+    operands return the raw int32 accumulator (quantized end-to-end:
+    :func:`quant_conv`)."""
     interpret = _default_interpret() if interpret is None else interpret
     return _vconv.vdbb_im2col_conv(
         x, w, kh, kw, stride=stride, padding=padding, bf=bf,
         tile_h=tile_h, tile_w=tile_w, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kh", "kw", "stride", "padding", "bf", "tile_h", "tile_w", "interpret"),
+)
+def quant_conv(
+    x: jax.Array,
+    qw: QuantDBBWeight,
+    kh: int,
+    kw: int,
+    act_scale: jax.Array | None = None,
+    *,
+    stride=1,
+    padding="SAME",
+    bf: int = 128,
+    tile_h: int | None = None,
+    tile_w: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """fp NHWC × int8-quantized compressed conv weight -> fp32 NHWC.
+
+    The conv twin of :func:`quant_matmul`: per-tensor activation
+    quantization (calibrated ``act_scale`` or dynamic), int8 fused
+    IM2COL × VDBB kernel with the int32 accumulator, dequantization fused
+    into the accumulator flush.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    s_a = dynamic_act_scale(x) if act_scale is None else act_scale
+    xq = quantize(x, s_a)
+    return _vconv.vdbb_im2col_conv(
+        xq, qw.as_dbb(), kh, kw, scales=s_a * qw.scales, stride=stride,
+        padding=padding, bf=bf, tile_h=tile_h, tile_w=tile_w,
+        interpret=interpret,
     )

@@ -34,6 +34,25 @@ def vdbb_matmul_ref(a: jax.Array, values: jax.Array, indices: jax.Array, fmt: DB
     return jnp.matmul(a, dbb_decode(dw).astype(a.dtype))
 
 
+def vdbb_matmul_int_ref(a: jax.Array, values: jax.Array, indices: jax.Array,
+                        fmt: DBBFormat) -> jax.Array:
+    """Integer oracle for the int8 tc/bw kernels: expand the int8 compressed
+    weight to dense and accumulate in exact int32 — the raw OS accumulator
+    the hardware produces before requantization (DESIGN.md §8).
+
+    a: (M, K) int8; values: (nb, nnz, N) int8; indices as in
+    :func:`vdbb_matmul_ref`. Returns (M, N) int32, bit-exact.
+    """
+    import dataclasses
+
+    nb, nnz, n = values.shape
+    if indices.ndim == 2:
+        indices = jnp.broadcast_to(indices[:, :, None], (nb, nnz, n))
+    fmt_pc = dataclasses.replace(fmt, group=None)
+    dw = DBBWeight(values, indices.astype(jnp.int8), fmt_pc, (nb * fmt.bz, n))
+    return jnp.matmul(a.astype(jnp.int32), dbb_decode(dw).astype(jnp.int32))
+
+
 def im2col_explicit(x: jax.Array, kh: int, kw: int, *, stride=1, padding="SAME") -> jax.Array:
     """Explicit im2col producing the duplicated (N, Ho, Wo, kh*kw*C) tensor —
     the memory-footprint blow-up the hardware unit avoids."""
@@ -74,3 +93,15 @@ def sparse_conv_ref(x: jax.Array, dw: DBBWeight, kh: int, kw: int, *, stride=1,
     weight to dense (kh, kw, C, F) and run the XLA conv."""
     w4 = dbb_decode_conv(dw, kh, kw).astype(x.dtype)
     return conv_lax_ref(x, w4, stride=stride, padding=padding)
+
+
+def sparse_conv_int_ref(x: jax.Array, dw: DBBWeight, kh: int, kw: int, *,
+                        stride=1, padding="SAME") -> jax.Array:
+    """Integer oracle for the int8 fused conv kernels: dtype-preserving
+    explicit im2col (pad/slice/concat) + exact int32 GEMM over the decoded
+    int8 weight. x: (N, H, W, C) int8; returns (N, Ho, Wo, F) int32."""
+    cols = im2col_explicit(x, kh, kw, stride=stride, padding=padding)
+    n, ho, wo, kk = cols.shape
+    w2 = dbb_decode(dw).astype(jnp.int32)  # (K, F)
+    acc = jnp.matmul(cols.reshape(-1, kk).astype(jnp.int32), w2)
+    return acc.reshape(n, ho, wo, -1)

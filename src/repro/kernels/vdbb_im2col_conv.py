@@ -34,7 +34,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.vdbb import DBBFormat, DBBWeight
 from repro.kernels import core
 from repro.kernels.im2col_conv import conv_out_spec, plan_conv
-from repro.kernels.vdbb_matmul import dbb_expand_block
+from repro.kernels.vdbb_matmul import _split_refs, dbb_expand_block
 
 
 def _conv_weight_geometry(dw: DBBWeight, kh: int, kw: int):
@@ -58,14 +58,17 @@ def _conv_weight_geometry(dw: DBBWeight, kh: int, kw: int):
 
 
 def _vdbb_conv_tc_kernel(
-    x_ref, v_ref, idx_ref, o_ref, acc_ref, *, bz, nnz, kw, sh, sw, bh, bw
+    x_ref, v_ref, idx_ref, *rest, bz, nnz, kw, sh, sw, bh, bw
 ):
     """Grid: (N·th·tw, F/bf, kh·kw). x: (1, bh_in, bw_in, C);
-    v: (1, cb·nnz, bf); idx: (1, cb, nnz) int32."""
+    v: (1, cb·nnz, bf); idx: (1, cb, nnz) int32; optional s: (1, bf) fp32
+    dequant scales (int8 path, DESIGN.md §8)."""
+    s_ref, o_ref, acc_ref = _split_refs(rest)
     t = pl.program_id(2)
     patch = core.conv_patch(x_ref[0], t // kw, t % kw, bh=bh, bw=bw, sh=sh, sw=sw)
     c = patch.shape[-1]
     cb = c // bz
+    pref = core.acc_dtype_for(patch.dtype)  # int32 for int8 operands
     a = patch.reshape(bh * bw, cb, bz)
     idx = idx_ref[0]  # (cb, nnz)
     # The activation mux: one-hot gather A[:, b, idx[b, j]] -> compressed K.
@@ -74,13 +77,14 @@ def _vdbb_conv_tc_kernel(
         a,
         onehot,
         dimension_numbers=(((2,), (2,)), ((1,), (0,))),
-        preferred_element_type=jnp.float32,
+        preferred_element_type=pref,
     )  # (cb, bh*bw, nnz)
     ac = ac.transpose(1, 0, 2).reshape(bh * bw, cb * nnz).astype(a.dtype)
     contrib = jax.lax.dot(
-        ac, v_ref[0].astype(a.dtype), preferred_element_type=jnp.float32
+        ac, v_ref[0].astype(a.dtype), preferred_element_type=pref
     )
-    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2)
+    scale = s_ref[...] if s_ref is not None else None
+    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2, scale=scale)
 
 
 # ---------------------------------------------------------------------------
@@ -89,10 +93,12 @@ def _vdbb_conv_tc_kernel(
 
 
 def _vdbb_conv_bw_kernel(
-    x_ref, v_ref, idx_ref, o_ref, acc_ref, *, bz, nnz, kw, sh, sw, bh, bw
+    x_ref, v_ref, idx_ref, *rest, bz, nnz, kw, sh, sw, bh, bw
 ):
     """Grid: (N·th·tw, F/bf, kh·kw). x: (1, bh_in, bw_in, C);
-    v/idx: (1, cb·nnz, bf) — per-column patterns."""
+    v/idx: (1, cb·nnz, bf) — per-column patterns; optional s: (1, bf)
+    fp32 dequant scales (int8 path, DESIGN.md §8)."""
+    s_ref, o_ref, acc_ref = _split_refs(rest)
     t = pl.program_id(2)
     patch = core.conv_patch(x_ref[0], t // kw, t % kw, bh=bh, bw=bw, sh=sh, sw=sw)
     bf = o_ref.shape[-1]
@@ -101,9 +107,12 @@ def _vdbb_conv_bw_kernel(
     idx = idx_ref[0].reshape(cb, nnz, bf)
     wd = dbb_expand_block(v, idx, bz)  # (C, bf), the "late mux"
     contrib = jax.lax.dot(
-        patch, wd.astype(patch.dtype), preferred_element_type=jnp.float32
+        patch,
+        wd.astype(patch.dtype),
+        preferred_element_type=core.acc_dtype_for(patch.dtype),
     )
-    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2)
+    scale = s_ref[...] if s_ref is not None else None
+    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2, scale=scale)
 
 
 # ---------------------------------------------------------------------------
@@ -112,11 +121,19 @@ def _vdbb_conv_bw_kernel(
 
 
 def _launch(kernel, x, operands, wspecs, fmt, kh, kw, *, stride, padding, bf,
-            tile_h, tile_w, out_dtype, interpret):
+            tile_h, tile_w, out_dtype, interpret, scales=None):
     n = x.shape[0]
+    f = operands[0].shape[-1]
     xt, g = plan_conv(x, kh, kw, stride=stride, padding=padding,
                       tile_h=tile_h, tile_w=tile_w)
-    grid = (n * g["th"] * g["tw"], operands[0].shape[-1] // bf, kh * kw)
+    grid = (n * g["th"] * g["tw"], f // bf, kh * kw)
+    acc_dtype = core.acc_dtype_for(x.dtype)  # int32 on the int8 path
+    if scales is not None:
+        operands = (*operands, scales.astype(jnp.float32).reshape(1, f))
+        wspecs = [*wspecs, pl.BlockSpec((1, bf), lambda p, j, t: (0, j))]
+        out_dtype = out_dtype or jnp.float32
+    elif out_dtype is None:
+        out_dtype = jnp.int32 if acc_dtype == jnp.int32 else x.dtype
     return pl.pallas_call(
         functools.partial(
             kernel, bz=fmt.bz, nnz=fmt.nnz, kw=kw,
@@ -128,10 +145,8 @@ def _launch(kernel, x, operands, wspecs, fmt, kh, kw, *, stride, padding, bf,
             *wspecs,
         ],
         out_specs=conv_out_spec(g, bf),
-        out_shape=jax.ShapeDtypeStruct(
-            (n, g["ho"], g["wo"], operands[0].shape[-1]), out_dtype or x.dtype
-        ),
-        scratch_shapes=[pltpu.VMEM((g["bh"] * g["bw"], bf), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((n, g["ho"], g["wo"], f), out_dtype),
+        scratch_shapes=[pltpu.VMEM((g["bh"] * g["bw"], bf), acc_dtype)],
         interpret=core.resolve_interpret(interpret),
     )(xt, *operands)
 
@@ -144,6 +159,7 @@ def vdbb_im2col_conv_tc(
     kh: int,
     kw: int,
     *,
+    scales: jax.Array | None = None,
     stride=1,
     padding="SAME",
     bf: int = 128,
@@ -153,7 +169,9 @@ def vdbb_im2col_conv_tc(
     interpret: bool | None = True,
 ) -> jax.Array:
     """Fused sparse conv, group-shared patterns. x: (N, H, W, C);
-    values: (nb, nnz, F); indices: (nb, nnz) with nb = kh·kw·C/bz."""
+    values: (nb, nnz, F); indices: (nb, nnz) with nb = kh·kw·C/bz.
+    int8 operands accumulate in exact int32; ``scales`` (F,) fuses
+    dequantization into the accumulator flush (out fp32)."""
     nb, nnz, f = values.shape
     c = nb * fmt.bz // (kh * kw)
     cb = c // fmt.bz
@@ -167,7 +185,7 @@ def vdbb_im2col_conv_tc(
     return _launch(
         _vdbb_conv_tc_kernel, x, (v, idx), wspecs, fmt, kh, kw,
         stride=stride, padding=padding, bf=bf, tile_h=tile_h, tile_w=tile_w,
-        out_dtype=out_dtype, interpret=interpret,
+        out_dtype=out_dtype, interpret=interpret, scales=scales,
     )
 
 
@@ -179,6 +197,7 @@ def vdbb_im2col_conv_bw(
     kh: int,
     kw: int,
     *,
+    scales: jax.Array | None = None,
     stride=1,
     padding="SAME",
     bf: int = 128,
@@ -187,7 +206,8 @@ def vdbb_im2col_conv_bw(
     out_dtype=None,
     interpret: bool | None = True,
 ) -> jax.Array:
-    """Fused sparse conv, per-column patterns. values/indices: (nb, nnz, F)."""
+    """Fused sparse conv, per-column patterns. values/indices: (nb, nnz, F).
+    int8 + ``scales`` as in :func:`vdbb_im2col_conv_tc`."""
     nb, nnz, f = values.shape
     c = nb * fmt.bz // (kh * kw)
     cb = c // fmt.bz
@@ -201,7 +221,7 @@ def vdbb_im2col_conv_bw(
     return _launch(
         _vdbb_conv_bw_kernel, x, (v, idx), wspecs, fmt, kh, kw,
         stride=stride, padding=padding, bf=bf, tile_h=tile_h, tile_w=tile_w,
-        out_dtype=out_dtype, interpret=interpret,
+        out_dtype=out_dtype, interpret=interpret, scales=scales,
     )
 
 

@@ -16,8 +16,15 @@ Two modes, mirroring DESIGN.md §2:
   storage format bit-for-bit.
 
 Both kernels are built on :mod:`repro.kernels.core` — the shared
-output-stationary fp32 VMEM accumulator with the K-block grid dimension
+output-stationary VMEM accumulator with the K-block grid dimension
 innermost (the systolic array's output-stationary dataflow).
+
+Both accept int8 operands (the ASIC's native precision, DESIGN.md §8):
+integer inputs switch the whole pipeline — one-hot mux, MXU dots, OS
+accumulator — to exact int32 arithmetic, and the optional per-output-column
+``scales`` operand fuses the dequantization into the accumulator flush
+(int32 → fp32 · scale), which is where the hardware's requantizer sits.
+Without ``scales`` the raw int32 accumulator is returned.
 
 Tiling taxonomy (paper's A×B×C_M×N → BlockSpec): bm×bn is the TPE array
 footprint (output tile), bz=B is the block size, kb is how many blocks
@@ -52,10 +59,21 @@ def _check_compressed_operands(a, values, fmt):
 # ---------------------------------------------------------------------------
 
 
-def _vdbb_tc_kernel(a_ref, v_ref, idx_ref, o_ref, acc_ref, *, bz, nnz, kb):
+def _split_refs(rest):
+    """(s_ref | None, o_ref, acc_ref) — the optional dequant-scales operand
+    rides last in the input list when present (quantized path)."""
+    if len(rest) == 3:
+        return rest
+    return (None, *rest)
+
+
+def _vdbb_tc_kernel(a_ref, v_ref, idx_ref, *rest, bz, nnz, kb):
     """Grid: (M/bm, N/bn, NB/kb). a: (bm, kb*bz); v: (kb*nnz, bn);
-    idx: (kb, nnz) int32; acc: (bm, bn) f32 VMEM scratch."""
+    idx: (kb, nnz) int32; acc: (bm, bn) f32/i32 VMEM scratch; optional
+    s: (1, bn) fp32 dequant scales (int8 path)."""
+    s_ref, o_ref, acc_ref = _split_refs(rest)
     bm = a_ref.shape[0]
+    pref = core.acc_dtype_for(a_ref.dtype)  # int32 for int8 operands
     a = a_ref[...].reshape(bm, kb, bz)
     idx = idx_ref[...]  # (kb, nnz)
     # The activation mux: one-hot gather A[:, k, idx[k, j]] -> (bm, kb, nnz).
@@ -64,13 +82,30 @@ def _vdbb_tc_kernel(a_ref, v_ref, idx_ref, o_ref, acc_ref, *, bz, nnz, kb):
         a,
         onehot,
         dimension_numbers=(((2,), (2,)), ((1,), (0,))),
-        preferred_element_type=jnp.float32,
+        preferred_element_type=pref,
     )  # (kb, bm, nnz)
+    # exact cast back: gathered values are the original int8/float operands
     ac = ac.transpose(1, 0, 2).reshape(bm, kb * nnz).astype(a.dtype)
     contrib = jax.lax.dot(
-        ac, v_ref[...].astype(a.dtype), preferred_element_type=jnp.float32
+        ac, v_ref[...].astype(a.dtype), preferred_element_type=pref
     )
-    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2)
+    scale = s_ref[...] if s_ref is not None else None
+    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2, scale=scale)
+
+
+def _quant_operands(a, scales, out_dtype, bn):
+    """Resolve the int8-path extras: accumulator dtype, default out dtype
+    (fp32 with fused dequant, raw int32 without), and the (1, N) scales
+    operand + BlockSpec to append when ``scales`` is given."""
+    acc = core.acc_dtype_for(a.dtype)
+    if scales is not None:
+        ops = [scales.astype(jnp.float32).reshape(1, -1)]
+        specs = [pl.BlockSpec((1, bn), lambda i, j, s: (0, j))]
+        out = out_dtype or jnp.float32
+    else:
+        ops, specs = [], []
+        out = out_dtype or (jnp.int32 if acc == jnp.int32 else a.dtype)
+    return acc, out, ops, specs
 
 
 def vdbb_matmul_tc(
@@ -79,6 +114,7 @@ def vdbb_matmul_tc(
     indices: jax.Array,
     fmt: DBBFormat,
     *,
+    scales: jax.Array | None = None,
     bm: int = 128,
     bn: int = 256,
     kb: int = 16,
@@ -86,7 +122,9 @@ def vdbb_matmul_tc(
     interpret: bool = True,
 ) -> jax.Array:
     """A (M, K) × compressed W -> (M, N). values: (nb, nnz, N);
-    indices: (nb, nnz) int (pattern shared across N)."""
+    indices: (nb, nnz) int (pattern shared across N). int8 operands
+    accumulate in exact int32; ``scales`` (N,) fuses dequantization into
+    the accumulator flush (out fp32)."""
     m, k, nb, n = _check_compressed_operands(a, values, fmt)
     bz, nnz = fmt.bz, fmt.nnz
     bm = core.resolve_tile(m, bm, "bm")
@@ -94,9 +132,10 @@ def vdbb_matmul_tc(
     kb = core.resolve_tile(nb, kb, "kb")
     v2 = values.reshape(nb * nnz, n)
     idx = indices.astype(jnp.int32)
+    acc_dtype, out_dtype, s_ops, s_specs = _quant_operands(a, scales, out_dtype, bn)
     return core.os_matmul_call(
         functools.partial(_vdbb_tc_kernel, bz=bz, nnz=nnz, kb=kb),
-        (a, v2, idx),
+        (a, v2, idx, *s_ops),
         m=m,
         n=n,
         bm=bm,
@@ -106,8 +145,10 @@ def vdbb_matmul_tc(
             pl.BlockSpec((bm, kb * bz), lambda i, j, s: (i, s)),
             pl.BlockSpec((kb * nnz, bn), lambda i, j, s: (s, j)),
             pl.BlockSpec((kb, nnz), lambda i, j, s: (s, 0)),
+            *s_specs,
         ],
-        out_dtype=out_dtype or a.dtype,
+        out_dtype=out_dtype,
+        acc_dtype=acc_dtype,
         interpret=interpret,
     )
 
@@ -120,25 +161,33 @@ def vdbb_matmul_tc(
 def dbb_expand_block(v, idx, bz):
     """In-VMEM scatter-expand of a compressed (kb, nnz, bn) block to dense
     (kb*bz, bn) — the "late mux" right before the MAC:
-    wd[k, i, n] = sum_j [idx[k, j, n] == i] * v[k, j, n]."""
+    wd[k, i, n] = sum_j [idx[k, j, n] == i] * v[k, j, n].
+
+    Dtype-preserving (int8 stays int8: positions within a block-column are
+    distinct, so each output element receives at most one non-zero)."""
     kb, nnz, bn = v.shape
     i_iota = jax.lax.broadcasted_iota(jnp.int32, (kb, bz, nnz, bn), 1)
     sel = (idx[:, None, :, :] == i_iota).astype(v.dtype)
-    wd = (sel * v[:, None, :, :]).sum(axis=2)  # (kb, bz, bn)
+    wd = (sel * v[:, None, :, :]).sum(axis=2).astype(v.dtype)  # (kb, bz, bn)
     return wd.reshape(kb * bz, bn)
 
 
-def _vdbb_bw_kernel(a_ref, v_ref, idx_ref, o_ref, acc_ref, *, bz, nnz, kb):
+def _vdbb_bw_kernel(a_ref, v_ref, idx_ref, *rest, bz, nnz, kb):
     """Grid: (M/bm, N/bn, NB/kb). a: (bm, kb*bz); v: (kb*nnz, bn);
-    idx: (kb*nnz, bn) int32 — per-column patterns."""
+    idx: (kb*nnz, bn) int32 — per-column patterns; optional s: (1, bn)
+    fp32 dequant scales (int8 path)."""
+    s_ref, o_ref, acc_ref = _split_refs(rest)
     bn = o_ref.shape[1]
     v = v_ref[...].reshape(kb, nnz, bn)
     idx = idx_ref[...].reshape(kb, nnz, bn)
     wd = dbb_expand_block(v, idx, bz)
     contrib = jax.lax.dot(
-        a_ref[...], wd.astype(a_ref.dtype), preferred_element_type=jnp.float32
+        a_ref[...],
+        wd.astype(a_ref.dtype),
+        preferred_element_type=core.acc_dtype_for(a_ref.dtype),
     )
-    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2)
+    scale = s_ref[...] if s_ref is not None else None
+    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2, scale=scale)
 
 
 def vdbb_matmul_bw(
@@ -147,13 +196,16 @@ def vdbb_matmul_bw(
     indices: jax.Array,
     fmt: DBBFormat,
     *,
+    scales: jax.Array | None = None,
     bm: int = 128,
     bn: int = 256,
     kb: int = 8,
     out_dtype=None,
     interpret: bool = True,
 ) -> jax.Array:
-    """A (M, K) × compressed W -> (M, N). values/indices: (nb, nnz, N)."""
+    """A (M, K) × compressed W -> (M, N). values/indices: (nb, nnz, N).
+    int8 operands accumulate in exact int32; ``scales`` (N,) fuses
+    dequantization into the accumulator flush (out fp32)."""
     m, k, nb, n = _check_compressed_operands(a, values, fmt)
     bz, nnz = fmt.bz, fmt.nnz
     bm = core.resolve_tile(m, bm, "bm")
@@ -161,9 +213,10 @@ def vdbb_matmul_bw(
     kb = core.resolve_tile(nb, kb, "kb")
     v2 = values.reshape(nb * nnz, n)
     idx2 = indices.astype(jnp.int32).reshape(nb * nnz, n)
+    acc_dtype, out_dtype, s_ops, s_specs = _quant_operands(a, scales, out_dtype, bn)
     return core.os_matmul_call(
         functools.partial(_vdbb_bw_kernel, bz=bz, nnz=nnz, kb=kb),
-        (a, v2, idx2),
+        (a, v2, idx2, *s_ops),
         m=m,
         n=n,
         bm=bm,
@@ -173,7 +226,9 @@ def vdbb_matmul_bw(
             pl.BlockSpec((bm, kb * bz), lambda i, j, s: (i, s)),
             pl.BlockSpec((kb * nnz, bn), lambda i, j, s: (s, j)),
             pl.BlockSpec((kb * nnz, bn), lambda i, j, s: (s, j)),
+            *s_specs,
         ],
-        out_dtype=out_dtype or a.dtype,
+        out_dtype=out_dtype,
+        acc_dtype=acc_dtype,
         interpret=interpret,
     )

@@ -6,11 +6,14 @@ first-class model next to the LM zoo: a VGG-style stack of DBBConv2d
 stages (conv → ReLU, stride-2 downsample between stages) closed by global
 average pooling and a DBBLinear classifier head.
 
-Same three-phase lifecycle as the LM (train → constrain → compress):
-``constrain()`` projects every conv/linear weight onto the DBB constraint,
-``compress()`` converts them to the compressed DBBWeight layout, and the
-forward pass then runs the fused IM2COL × VDBB conv per layer
-(``kernel_mode='pallas'``) or the decode + XLA conv reference path.
+Same lifecycle as the LM (train → constrain → compress), plus the INT8
+serving step: ``constrain()`` projects every conv/linear weight onto the
+DBB constraint, ``compress()`` converts them to the compressed DBBWeight
+layout, ``quantize()`` (optionally calibrated by the stats from
+``apply(collect_act_stats=True)``) converts to the ASIC's INT8 numerics
+(DESIGN.md §8), and the forward pass then runs the fused IM2COL × VDBB
+conv per layer (``kernel_mode='pallas'``) or the decode + XLA conv
+reference path.
 """
 from __future__ import annotations
 
@@ -159,14 +162,41 @@ class SparseCNN:
             out[f"l{i}"] = m.compress_params(params[f"l{i}"])
         return out
 
+    def quantize(self, params: dict, stats=None) -> dict:
+        """INT8 serving conversion of compressed params (DESIGN.md §8).
+
+        ``stats`` (optional): per-layer calibration :class:`ActStats` from
+        ``apply(params, x_cal, collect_act_stats=True)`` — one per layer,
+        measured on the activation each layer *reads*, whose ``absmax``
+        becomes that layer's static per-tensor activation scale. Without
+        stats, activation scales are dynamic (computed per batch). Dense
+        layers (the C=3 stem) stay fp32, like the paper's uncompressed
+        first layer.
+        """
+        from repro.core.quant import act_scale_from_stats
+
+        layers = self.layers()
+        if stats is not None and len(stats) != len(layers):
+            raise ValueError(
+                f"calibration stats for {len(stats)} layers, model has {len(layers)}"
+            )
+        out = {}
+        for i, m in enumerate(layers):
+            scale = act_scale_from_stats(stats[i]) if stats is not None else None
+            out[f"l{i}"] = m.quantize(params[f"l{i}"], act_scale=scale)
+        return out
+
     # ------------------------------------------------------------ costs
-    def layer_costs(self, batch: int, *, bits: int = 8, stats=None) -> list:
+    def layer_costs(self, batch: int, *, bits: int = 8, act_bits=None,
+                    stats=None) -> list:
         """Per-conv-layer ``dbb_conv_costs`` dicts for this model.
 
         ``stats`` (optional): per-layer ActStats from
         ``apply(collect_act_stats=True)`` — layer i's measured activation
         sparsity is recorded into its cost dict, ready for
-        ``energy_model.model_workload``. Returns (name, costs, fmt) triples.
+        ``energy_model.model_workload``. ``bits``/``act_bits`` are the
+        operand widths (8 = the INT8 serving path of ``quantize()``).
+        Returns (name, costs, fmt) triples.
         """
         from repro.core.vdbb import dbb_conv_costs
 
@@ -183,7 +213,7 @@ class SparseCNN:
                     dbb_conv_costs(
                         batch, h, w, m.in_channels, m.out_channels, m.kh, m.kw,
                         m.fmt, stride=m.stride, padding=m.padding, bits=bits,
-                        act=act,
+                        act_bits=act_bits, act=act,
                     ),
                     m.fmt,
                 )

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.quant import dynamic_act_scale, quantize, quantize_dbb
 from repro.core.vdbb import DBBFormat, dbb_encode
 from repro.kernels import ops, ref
 from repro.kernels.vdbb_matmul import vdbb_matmul_bw, vdbb_matmul_tc
@@ -17,18 +18,37 @@ from repro.xla_utils import cost_analysis_dict
 
 
 def _mk(m, k, n, nnz, group, dtype, seed=0):
+    """Operands for one sweep point. dtype=int8 quantizes both operands
+    (per-tensor act, per-channel weight — DESIGN.md §8); the kernels then
+    run the exact int32-accumulator path."""
     k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
-    a = jax.random.normal(k1, (m, k), jnp.float32).astype(dtype)
+    a = jax.random.normal(k1, (m, k), jnp.float32)
     w = jax.random.normal(k2, (k, n), jnp.float32)
     fmt = DBBFormat(8, nnz, group)
     dw = dbb_encode(w, fmt, prune=True)
+    if dtype == jnp.int8:
+        return quantize(a, dynamic_act_scale(a)), quantize_dbb(dw).as_dbb(), fmt
     dw = jax.tree_util.tree_map(
         lambda x: x.astype(dtype) if x.dtype == jnp.float32 else x, dw
     )
-    return a, dw, fmt
+    return a.astype(dtype), dw, fmt
 
 
 TOLS = {jnp.float32: dict(rtol=1e-4, atol=1e-4), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _assert_matches_ref(got, a, dw, idx, fmt, dtype):
+    """fp dtypes: allclose vs the fp oracle; int8: bit-exact vs the exact
+    int32 integer oracle."""
+    if dtype == jnp.int8:
+        assert got.dtype == jnp.int32
+        want = ref.vdbb_matmul_int_ref(a, dw.values, idx, fmt)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        want = ref.vdbb_matmul_ref(a, dw.values, idx, fmt)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), **TOLS[dtype]
+        )
 
 
 class TestVDBBMatmulTC:
@@ -42,14 +62,11 @@ class TestVDBBMatmulTC:
             (64, 64, 32, 7),
         ],
     )
-    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
     def test_allclose_vs_ref(self, m, k, n, nnz, dtype):
         a, dw, fmt = _mk(m, k, n, nnz, "matrix", dtype)
         got = vdbb_matmul_tc(a, dw.values, dw.indices[:, :, 0], fmt, bm=32, bn=32, kb=2)
-        want = ref.vdbb_matmul_ref(a, dw.values, dw.indices[:, :, 0], fmt)
-        np.testing.assert_allclose(
-            np.asarray(got, np.float32), np.asarray(want, np.float32), **TOLS[dtype]
-        )
+        _assert_matches_ref(got, a, dw, dw.indices[:, :, 0], fmt, dtype)
 
     @pytest.mark.slow
     @pytest.mark.parametrize("bm,bn,kb", [(8, 16, 1), (16, 32, 4), (64, 64, 8)])
@@ -87,16 +104,13 @@ class TestVDBBMatmulBW:
             (8, 64, 32, 8, None),
         ],
     )
-    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
     def test_allclose_vs_ref(self, m, k, n, nnz, group, dtype):
         a, dw, fmt = _mk(m, k, n, nnz, group, dtype)
         got = ops.vdbb_matmul(a, dw, bm=8, bn=16, kb=2, interpret=True)
         g = fmt.group_size(n)
         idx = jnp.repeat(dw.indices, g, axis=2) if g > 1 else dw.indices
-        want = ref.vdbb_matmul_ref(a, dw.values, idx, fmt)
-        np.testing.assert_allclose(
-            np.asarray(got, np.float32), np.asarray(want, np.float32), **TOLS[dtype]
-        )
+        _assert_matches_ref(got, a, dw, idx, fmt, dtype)
 
     def test_weight_bytes_compressed(self):
         """The kernel consumes the compressed stream: HBM weight operand is
@@ -137,11 +151,27 @@ class TestIm2colConv:
     @pytest.mark.parametrize(
         "n,h,w,c,f,kh", [(1, 8, 8, 8, 16, 3), (2, 6, 10, 4, 8, 3), (1, 12, 12, 8, 32, 5)]
     )
-    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
     def test_allclose_vs_refs(self, n, h, w, c, f, kh, dtype):
         k1, k2 = jax.random.split(jax.random.PRNGKey(1))
-        x = jax.random.normal(k1, (n, h, w, c), jnp.float32).astype(dtype)
-        wk = jax.random.normal(k2, (kh, kh, c, f), jnp.float32).astype(dtype)
+        x = jax.random.normal(k1, (n, h, w, c), jnp.float32)
+        wk = jax.random.normal(k2, (kh, kh, c, f), jnp.float32)
+        if dtype == jnp.int8:
+            # int8 operand path: exact int32 accumulate vs the dtype-
+            # preserving explicit-im2col integer oracle
+            x = quantize(x, dynamic_act_scale(x))
+            wk = quantize(wk, dynamic_act_scale(wk))
+            got = ops.fused_im2col_conv(x, wk, bf=8, interpret=True)
+            assert got.dtype == jnp.int32
+            cols = ref.im2col_explicit(x, kh, kh)
+            want = jnp.einsum(
+                "nhwk,kf->nhwf",
+                cols.astype(jnp.int32),
+                wk.reshape(kh * kh * c, f).astype(jnp.int32),
+            )
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+            return
+        x, wk = x.astype(dtype), wk.astype(dtype)
         got = ops.fused_im2col_conv(x, wk, bf=8, interpret=True)
         want = ref.conv_lax_ref(x, wk)
         want2 = ref.im2col_conv_ref(x, wk)

@@ -1,0 +1,296 @@
+"""INT8 quantized VDBB datapath tests (DESIGN.md §8).
+
+Layers of the pyramid, bottom-up: quantize→dequantize round-trip bounds
+and scale-shape invariants; int8 tc/bw/conv Pallas kernels bit-exact
+against the exact-int32 integer references (interpret mode on CPU — the
+code that compiles for TPU); the fused dequant-on-flush path; the
+quantized SparseCNN lifecycle (calibrate → quantize → apply) against its
+fp32 logits across three density bounds; and QuantDBBWeight checkpoint
+round-trip through the npz store.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.act_sparsity import combine, measure_activation
+from repro.core.vdbb import DBBFormat, dbb_decode, dbb_encode, dbb_encode_conv
+from repro.kernels import ops, ref
+
+
+def _mk(m, k, n, nnz, group, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(k1, (m, k))
+    w = jax.random.normal(k2, (k, n))
+    fmt = DBBFormat(8, nnz, group)
+    dw = dbb_encode(w, fmt, prune=True)
+    qw = quant.quantize_dbb(dw)
+    s_a = quant.dynamic_act_scale(a)
+    return a, quant.quantize(a, s_a), s_a, dw, qw, fmt
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize round trip
+# ---------------------------------------------------------------------------
+
+
+class TestRoundTrip:
+    def test_weight_round_trip_error_bound(self):
+        """Round-to-nearest: per-channel |W - deq(q(W))| <= scale/2."""
+        _, _, _, dw, qw, _ = _mk(8, 64, 32, 4, None)
+        back = quant.dequantize_dbb(qw)
+        err = jnp.abs(back.values - dw.values)
+        bound = qw.scales[None, None, :] / 2 + 1e-7
+        assert bool(jnp.all(err <= bound)), float((err - bound).max())
+
+    def test_weight_round_trip_decoded_dense(self):
+        """The bound survives decode: dense |W - deq| <= scale/2 per column."""
+        _, _, _, dw, qw, _ = _mk(8, 64, 32, 3, "matrix")
+        err = jnp.abs(dbb_decode(quant.dequantize_dbb(qw)) - dbb_decode(dw))
+        assert bool(jnp.all(err <= qw.scales[None, :] / 2 + 1e-7))
+
+    def test_act_round_trip_error_bound(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (16, 64))
+        s = quant.dynamic_act_scale(x)
+        back = quant.dequantize(quant.quantize(x, s), s)
+        assert bool(jnp.all(jnp.abs(back - x) <= s / 2 + 1e-7))
+
+    def test_scale_shape_invariants(self):
+        _, _, _, dw, qw, fmt = _mk(8, 64, 32, 4, None)
+        assert qw.values.shape == dw.values.shape and qw.values.dtype == jnp.int8
+        assert qw.indices.shape == dw.indices.shape
+        assert qw.scales.shape == (32,) and qw.scales.dtype == jnp.float32
+        assert qw.shape == dw.shape and qw.fmt == fmt
+        assert bool(jnp.all(qw.scales > 0))
+        # full int8 range is used: some channel hits ±127
+        assert int(jnp.max(jnp.abs(qw.values))) == quant.QMAX
+
+    def test_compressed_bytes_quarter_of_fp32(self):
+        _, _, _, dw, qw, _ = _mk(8, 512, 128, 2, None)
+        vals_fp = dw.values.size * 4
+        # int8 values are exactly 1/4 of the fp32 value stream
+        assert qw.nbytes_compressed() < dw.nbytes_compressed()
+        assert qw.values.size == vals_fp // 4
+
+    def test_quantize_rejects_integer_values(self):
+        _, _, _, _, qw, _ = _mk(8, 64, 32, 4, None)
+        with pytest.raises(ValueError):
+            quant.quantize_dbb(qw.as_dbb())
+
+    def test_act_scale_from_stats(self):
+        x = 3.0 * jax.random.normal(jax.random.PRNGKey(4), (8, 32))
+        st = measure_activation(x, name="t")
+        assert st.absmax == pytest.approx(float(jnp.abs(x).max()))
+        assert quant.act_scale_from_stats(st) == pytest.approx(st.absmax / 127)
+        # combine keeps the max range (calibration over layers/batches)
+        st2 = measure_activation(0.1 * x, name="t2")
+        assert combine([st, st2]).absmax == pytest.approx(st.absmax)
+        with pytest.raises(ValueError):
+            quant.act_scale_from_stats(measure_activation(jnp.zeros((4, 8))))
+
+
+# ---------------------------------------------------------------------------
+# int8 kernels vs exact integer references (bit-exact)
+# ---------------------------------------------------------------------------
+
+
+class TestInt8KernelsBitExact:
+    @pytest.mark.parametrize("nnz", [2, 4, 8])
+    def test_tc_matches_int_ref(self, nnz):
+        _, aq, _, _, qw, fmt = _mk(16, 64, 32, nnz, "matrix")
+        got = ops.vdbb_matmul(aq, qw.as_dbb(), bm=8, bn=16, kb=2, interpret=True)
+        want = ref.vdbb_matmul_int_ref(aq, qw.values, qw.indices[:, :, 0], fmt)
+        assert got.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("nnz", [2, 4, 8])
+    def test_bw_matches_int_ref(self, nnz):
+        _, aq, _, _, qw, fmt = _mk(16, 64, 32, nnz, None, seed=1)
+        got = ops.vdbb_matmul(aq, qw.as_dbb(), bm=8, bn=16, kb=2, interpret=True)
+        want = ref.vdbb_matmul_int_ref(aq, qw.values, qw.indices, fmt)
+        assert got.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_grouped_expansion_matches_int_ref(self):
+        _, aq, _, _, qw, fmt = _mk(8, 64, 32, 3, 8, seed=2)
+        got = ops.vdbb_matmul(aq, qw.as_dbb(), bm=8, bn=16, kb=2, interpret=True)
+        idx = jnp.repeat(qw.indices, 8, axis=2)
+        want = ref.vdbb_matmul_int_ref(aq, qw.values, idx, fmt)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_fused_dequant_matches_ref_exactly(self):
+        """scales-on-flush == int32 accumulate then scale (same fp op)."""
+        a, aq, s_a, _, qw, _ = _mk(16, 64, 32, 4, "matrix", seed=3)
+        got = ops.quant_matmul(a, qw, s_a, bm=8, bn=16, kb=2, interpret=True)
+        want = quant.quant_matmul_ref(aq, qw, s_a)
+        assert got.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-7)
+
+    @pytest.mark.parametrize("group,stride", [("matrix", 1), (None, 2), (None, 1)])
+    def test_conv_matches_int_ref(self, group, stride):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+        x = jax.random.normal(k1, (2, 8, 8, 8))
+        wt = jax.random.normal(k2, (3, 3, 8, 16))
+        fmt = DBBFormat(8, 3, group)
+        qw = quant.quantize_dbb(dbb_encode_conv(wt, fmt, prune=True))
+        xq = quant.quantize(x, quant.dynamic_act_scale(x))
+        got = ops.sparse_conv(xq, qw.as_dbb(), 3, 3, stride=stride, bf=8, interpret=True)
+        want = ref.sparse_conv_int_ref(xq, qw.as_dbb(), 3, 3, stride=stride)
+        assert got.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_conv_fused_dequant_matches_ref(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(6))
+        x = jax.random.normal(k1, (1, 8, 8, 8))
+        wt = jax.random.normal(k2, (3, 3, 8, 16))
+        qw = quant.quantize_dbb(dbb_encode_conv(wt, DBBFormat(8, 2, "matrix"), prune=True))
+        s_a = quant.dynamic_act_scale(x)
+        got = ops.quant_conv(x, qw, 3, 3, s_a, bf=8, interpret=True)
+        want = quant.quant_conv_ref(quant.quantize(x, s_a), qw, 3, 3, s_a)
+        assert got.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-7)
+
+    def test_int32_accumulator_no_overflow_margin(self):
+        """Extreme-valued int8 operands over a long K stay exact in int32."""
+        k = 512
+        aq = jnp.full((4, k), quant.QMAX, jnp.int8)
+        w = jnp.ones((k, 16), jnp.float32)
+        qw = quant.quantize_dbb(dbb_encode(w, DBBFormat(8, 8, "matrix"), prune=True))
+        got = ops.vdbb_matmul(aq, qw.as_dbb(), bm=4, bn=16, kb=2, interpret=True)
+        assert int(got[0, 0]) == k * quant.QMAX * quant.QMAX
+
+
+# ---------------------------------------------------------------------------
+# quantized model lifecycle
+# ---------------------------------------------------------------------------
+
+
+def _smoke_model(sparsity, kernel_mode="ref"):
+    from repro.configs import smoke_cnn_config
+    from repro.models.cnn import SparseCNN
+
+    cfg = smoke_cnn_config("sparse-cnn-tiny", sparsity=sparsity)
+    cfg = dataclasses.replace(cfg, kernel_mode=kernel_mode)
+    model = SparseCNN(cfg)
+    params = model.compress(model.init(jax.random.PRNGKey(0)))
+    x = jax.random.normal(
+        jax.random.PRNGKey(1), (4, cfg.image_size, cfg.image_size, cfg.in_channels)
+    )
+    return model, params, x
+
+
+class TestQuantizedModel:
+    # nnz ∈ {2, 4, 8}: sparsity 0.75 → 2/8, 0.5 → 4/8; "dense" → the 8/8
+    # bound, which stays uncompressed (and therefore fp32) end to end —
+    # the documented fall-through for the dense density bound.
+    @pytest.mark.parametrize("sparsity", [0.75, 0.5, "dense"])
+    def test_quantized_logits_close_to_fp32(self, sparsity):
+        model, params, x = _smoke_model(sparsity)
+        logits_fp, stats = model.apply(params, x, collect_act_stats=True)
+        qparams = model.quantize(params, stats)
+        logits_q = model.apply(qparams, x)
+        rel = float(jnp.linalg.norm(logits_q - logits_fp) / jnp.linalg.norm(logits_fp))
+        # documented tolerance (DESIGN.md §8): < 5% relative L2 on logits
+        assert rel < 0.05, rel
+        if sparsity == "dense":
+            np.testing.assert_array_equal(  # fp fall-through is exact
+                np.asarray(logits_q), np.asarray(logits_fp)
+            )
+
+    def test_pallas_path_matches_ref_path(self):
+        model_r, params, x = _smoke_model(0.625, "ref")
+        model_p, _, _ = _smoke_model(0.625, "pallas")
+        _, stats = model_r.apply(params, x, collect_act_stats=True)
+        qparams = model_r.quantize(params, stats)
+        got = model_p.apply(qparams, x)
+        want = model_r.apply(qparams, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+    def test_calibrated_scales_are_static(self):
+        model, params, x = _smoke_model(0.625)
+        _, stats = model.apply(params, x, collect_act_stats=True)
+        qparams = model.quantize(params, stats)
+        # compressed layers carry a static per-tensor act scale...
+        quantized = [
+            p for p in qparams.values()
+            if isinstance(p.get("w"), quant.QuantDBBWeight)
+        ]
+        assert quantized and all("aq" in p for p in quantized)
+        # ...and without calibration, quantization is dynamic but still works
+        qdyn = model.quantize(params)
+        assert all("aq" not in p for p in qdyn.values())
+        logits = model.apply(qdyn, x)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_quantize_is_idempotent_and_preserves_stem(self):
+        model, params, x = _smoke_model(0.625)
+        qparams = model.quantize(params)
+        # stem (C=3, dense fmt) stays fp32
+        assert not isinstance(qparams["l0"]["w"], quant.QuantDBBWeight)
+        assert qparams["l0"]["w"].dtype == jnp.float32
+        again = model.quantize(qparams)
+        assert again["l1"]["w"] is qparams["l1"]["w"]
+
+    def test_requantize_updates_calibration_only(self):
+        """quantize() on already-quantized params with fresh stats must
+        refresh the static act scales without touching the int8 weights."""
+        model, params, x = _smoke_model(0.625)
+        _, stats = model.apply(params, x, collect_act_stats=True)
+        qparams = model.quantize(params)  # dynamic (no aq)
+        recal = model.quantize(qparams, stats)
+        assert recal["l1"]["w"] is qparams["l1"]["w"]
+        assert "aq" in recal["l1"]
+        assert float(recal["l1"]["aq"]) == pytest.approx(
+            quant.act_scale_from_stats(stats[1])
+        )
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip (satellite: store._BITCAST + int8 leaves)
+# ---------------------------------------------------------------------------
+
+
+class TestQuantCheckpoint:
+    def test_quant_dbb_weight_roundtrip(self, tmp_path):
+        from repro.checkpoint import store
+
+        _, _, _, _, qw, _ = _mk(8, 64, 32, 3, None, seed=7)
+        tree = {"l1": {"w": qw, "b": jnp.ones((32,), jnp.bfloat16)}}
+        store.save(tmp_path, 5, tree)
+        out, manifest = store.restore(tmp_path, tree)
+        qr = out["l1"]["w"]
+        assert isinstance(qr, quant.QuantDBBWeight)
+        assert qr.values.dtype == jnp.int8 and qr.indices.dtype == jnp.int8
+        assert qr.scales.dtype == jnp.float32
+        np.testing.assert_array_equal(np.asarray(qr.values), np.asarray(qw.values))
+        np.testing.assert_array_equal(np.asarray(qr.indices), np.asarray(qw.indices))
+        np.testing.assert_array_equal(np.asarray(qr.scales), np.asarray(qw.scales))
+        assert qr.fmt == qw.fmt and qr.shape == qw.shape
+        assert "int8" in manifest["dtypes"]
+
+    def test_quantized_model_params_roundtrip(self, tmp_path):
+        from repro.checkpoint import store
+
+        model, params, x = _smoke_model(0.625)
+        _, stats = model.apply(params, x, collect_act_stats=True)
+        qparams = model.quantize(params, stats)
+        store.save(tmp_path, 1, qparams)
+        out, _ = store.restore(tmp_path, qparams)
+        np.testing.assert_array_equal(
+            np.asarray(model.apply(out, x)), np.asarray(model.apply(qparams, x))
+        )
+
+    def test_int4_bitcast_roundtrip(self, tmp_path):
+        """_BITCAST covers the sub-byte formats too (int4 via uint8 view)."""
+        from repro.checkpoint import store
+
+        tree = {"v": jnp.arange(-8, 8, dtype=jnp.int4)}
+        store.save(tmp_path, 0, tree)
+        out, _ = store.restore(tmp_path, tree)
+        assert out["v"].dtype == jnp.int4
+        np.testing.assert_array_equal(
+            np.asarray(out["v"], np.int32), np.asarray(tree["v"], np.int32)
+        )

@@ -61,6 +61,29 @@ class TestVDBBCore:
         assert c["speedup"] == 4.0
         assert c["executed_macs"] == 64 * 128 * 128
 
+    def test_trailing_partial_k_block_accounting(self):
+        """Regression pin for the PR-2 trailing-partial-K fix: dense-format
+        GEMMs whose K is not bz-blockable (the C=3 conv stem, K = kh·kw·3)
+        must count — and store — the remainder positions, not drop them."""
+        from repro.core import dbb_conv_costs
+
+        m, k, n = 16, 27, 32  # 3x3x3 stem as a GEMM: K = 27 = 3 blocks + 3
+        fmt = DBBFormat(8, 8)  # dense bound (the only legal partial-K case)
+        c = dbb_gemm_costs(m, k, n, fmt)
+        assert c["executed_macs"] == m * k * n  # every position executes
+        nb, rem = divmod(k, fmt.bz)
+        assert (nb, rem) == (3, 3)
+        # full blocks stream values+mask; the rem positions stream
+        # uncompressed (8-bit value + 1 mask bit each)
+        assert c["weight_bytes"] == int((nb * (8 * 8 + 8) + rem * (8 + 1)) * n / 8)
+        assert c["act_bytes"] == m * k  # 8-bit operands, K *includes* rem
+        # the real stem layer shape end-to-end through the conv accounting
+        cc = dbb_conv_costs(1, 16, 16, 3, 32, 3, 3, fmt)
+        assert cc["executed_macs"] == cc["dense_macs"]
+        # a sparse bound over a non-blockable K must refuse, not undercount
+        with pytest.raises(ValueError):
+            dbb_gemm_costs(m, 27, n, DBBFormat(8, 4))
+
     def test_dense_bound_is_exact_dense(self):
         w = jax.random.normal(jax.random.PRNGKey(2), (32, 16))
         dw = dbb_encode(w, DBBFormat(8, 8), prune=True)

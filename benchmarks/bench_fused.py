@@ -1,0 +1,150 @@
+"""Fused epilogue vs unfused per-layer traffic + wall time (DESIGN.md §9).
+
+Three measurements, written machine-readable to ``BENCH_fused.json`` so
+the perf trajectory has data points across PRs:
+
+1. **modeled HBM bytes per conv layer** — `dbb_conv_costs` with and
+   without `epilogue_fused` over every compressed layer of the smoke
+   SparseCNN (acceptance: the fused datapath models ≥25% less traffic
+   per layer: int8 flush instead of fp32, zero standalone
+   dequant→bias/ReLU→requant passes);
+2. **compiled-HLO bytes accessed** — `jax.jit(...).compile()` cost
+   analysis of one quantized conv layer, fused epilogue vs the PR-3
+   kernel + standalone XLA epilogue ops (backend-dependent; reported
+   when the compiler exposes "bytes accessed");
+3. **wall time** — the same two programs end to end, plus the
+   int8-resident SparseCNN forward vs the per-layer-dequant path
+   (interpret-mode Pallas on CPU: relative, not absolute, numbers).
+"""
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.vdbb import DBBFormat, dbb_conv_costs, dbb_encode_conv
+from repro.kernels import ops
+from repro.xla_utils import cost_analysis_dict
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_fused.json"
+
+
+def _time_us(fn, *args, reps=3):
+    fn(*args)  # warm up / compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(report):
+    results = {"layers": [], "xla": {}, "wall_time_us": {}}
+
+    # --- 1. modeled per-layer HBM bytes (the acceptance criterion) --------
+    from repro.configs import smoke_cnn_config
+    from repro.models.cnn import SparseCNN
+
+    cfg = smoke_cnn_config("sparse-cnn-tiny", sparsity=0.625)
+    model = SparseCNN(cfg)
+    batch = 4
+    unfused = model.layer_costs(batch, bits=8, act_bits=8)
+    fused = model.layer_costs(batch, bits=8, act_bits=8, epilogue_fused=True)
+
+    def total(c):
+        return c["act_bytes"] + c["weight_bytes"] + c["out_bytes"] + c["epilogue_bytes"]
+
+    for (name, cu, fmt), (_, cf, _) in zip(unfused, fused):
+        saved = 1.0 - total(cf) / total(cu)
+        assert saved >= 0.25, (name, saved)  # acceptance: ≥25% per layer
+        results["layers"].append(
+            dict(name=name, hbm_bytes_unfused=total(cu), hbm_bytes_fused=total(cf),
+                 saved_frac=round(saved, 4), nnz=fmt.nnz, bz=fmt.bz)
+        )
+        report(f"fused/{name}_hbm_bytes", 0.0,
+               f"fused {total(cf)} vs unfused {total(cu)} (-{saved:.0%} modeled)")
+
+    # --- one quantized conv layer, fused kernel vs PR-3 + XLA epilogue ---
+    n, h, w, c, f = 2, 16, 16, 32, 64
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(k1, (n, h, w, c))
+    w4 = jax.random.normal(k2, (3, 3, c, f))
+    b = jax.random.normal(k3, (f,))
+    fmt = DBBFormat(8, 3, "matrix")
+    qw = quant.quantize_dbb(dbb_encode_conv(w4, fmt, prune=True))
+    s_a = quant.dynamic_act_scale(x)
+    out_s = jnp.float32(0.05)
+    xq = quant.quantize(x, s_a)
+
+    def fused_layer(xq):
+        return ops.quant_conv(xq, qw, 3, 3, s_a, bias=b, relu=True,
+                              out_scale=out_s, bf=f, interpret=True)
+
+    def unfused_layer(xq):
+        y = ops.quant_conv(xq, qw, 3, 3, s_a, bf=f, interpret=True)
+        return quant.quantize(jax.nn.relu(y + b), out_s)
+
+    np.testing.assert_array_equal(  # same int8 codes either way
+        np.asarray(fused_layer(xq)), np.asarray(unfused_layer(xq))
+    )
+
+    # --- 2. compiled-HLO traffic (backend-dependent, best effort) --------
+    for label, fn in (("fused", fused_layer), ("unfused", unfused_layer)):
+        cost = cost_analysis_dict(jax.jit(fn).lower(xq).compile())
+        results["xla"][label] = {
+            "bytes_accessed": cost.get("bytes accessed"),
+            "flops": cost.get("flops"),
+        }
+    ba_f = results["xla"]["fused"]["bytes_accessed"]
+    ba_u = results["xla"]["unfused"]["bytes_accessed"]
+    derived = (
+        f"hlo bytes {ba_f:.3g} vs {ba_u:.3g}" if ba_f and ba_u
+        else "hlo bytes unavailable on this backend"
+    )
+
+    # --- 3. wall time (interpret mode — relative only) --------------------
+    t_f = _time_us(jax.jit(fused_layer), xq)
+    t_u = _time_us(jax.jit(unfused_layer), xq)
+    results["wall_time_us"] = {"layer_fused": t_f, "layer_unfused": t_u}
+    report("fused/conv_layer", t_f, f"unfused {t_u:.0f}us; {derived}")
+
+    # int8-resident model forward vs the per-layer-dequant path
+    params = model.compress(model.init(jax.random.PRNGKey(0)))
+    xb = jax.random.normal(
+        jax.random.PRNGKey(1), (batch, cfg.image_size, cfg.image_size, cfg.in_channels)
+    )
+    _, stats = model.apply(params, xb, collect_act_stats=True)
+    qparams = model.quantize(params, stats)
+
+    @jax.jit
+    def chained(xb):
+        return model.apply(qparams, xb)
+
+    @jax.jit
+    def per_layer(xb):
+        layers = model.layers()
+        y = xb
+        for i, m in enumerate(layers[:-1]):
+            y = jax.nn.relu(m(qparams[f"l{i}"], y))
+        return layers[-1](qparams[f"l{len(layers) - 1}"], y.mean(axis=(1, 2)))
+
+    rel = float(
+        jnp.linalg.norm(chained(xb) - per_layer(xb))
+        / jnp.linalg.norm(per_layer(xb))
+    )
+    assert rel < 0.01, rel
+    t_c = _time_us(chained, xb)
+    t_p = _time_us(per_layer, xb)
+    results["wall_time_us"]["cnn_int8_resident"] = t_c
+    results["wall_time_us"]["cnn_per_layer_dequant"] = t_p
+    report("fused/cnn_forward", t_c,
+           f"per-layer-dequant {t_p:.0f}us, rel l2 {rel:.2e} (int8-resident chain)")
+
+    OUT_PATH.write_text(json.dumps(results, indent=2))
+    report("fused/json", 0.0, f"wrote {OUT_PATH.name}")
+
+
+if __name__ == "__main__":
+    run(lambda name, us, derived="": print(f"{name},{us:.1f},{derived}"))

@@ -3,10 +3,13 @@
 Prints ``name,us_per_call,derived`` CSV. ``python -m benchmarks.run``.
 ``--smoke`` runs the fast analytic subset (what CI runs so benchmark
 modules can't silently rot); the interpret-mode Pallas sweeps stay out.
+``--json <path>`` additionally writes every reported row as JSON for
+trajectory tracking (CI uploads the smoke results as an artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import pathlib
 import sys
 import traceback
@@ -32,6 +35,7 @@ BENCHES = [
     ("sparse_conv (IM2COL x VDBB fused)", "benchmarks.bench_sparse_conv", False),
     ("kernels (VDBB matmul)", "benchmarks.bench_kernels", False),
     ("quant (INT8 datapath, DESIGN §8)", "benchmarks.bench_quant", True),
+    ("fused (epilogue fusion, DESIGN §9)", "benchmarks.bench_fused", True),
     ("roofline (EXPERIMENTS §Roofline)", "benchmarks.roofline", True),
 ]
 
@@ -43,9 +47,19 @@ def main() -> None:
         "--smoke", action="store_true",
         help="fast analytic subset (CI): energy model + measured-act benches",
     )
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="also write every reported row as JSON (trajectory tracking)",
+    )
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = []
+    rows = []
+
+    def record(name: str, us_per_call: float, derived: str = ""):
+        report(name, us_per_call, derived)
+        rows.append(dict(name=name, us_per_call=us_per_call, derived=derived))
+
     import importlib
 
     for label, mod, smoke_ok in BENCHES:
@@ -54,11 +68,13 @@ def main() -> None:
         if args.smoke and not smoke_ok:
             continue
         try:
-            importlib.import_module(mod).run(report)
+            importlib.import_module(mod).run(record)
         except Exception as e:  # noqa: BLE001
             failures.append((label, e))
             traceback.print_exc()
-            report(f"{mod}/FAILED", 0.0, f"{type(e).__name__}: {e}")
+            record(f"{mod}/FAILED", 0.0, f"{type(e).__name__}: {e}")
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps({"rows": rows}, indent=2))
     if failures:
         sys.exit(1)
 

@@ -296,6 +296,11 @@ def conv_workload(design: STAConfig, costs: dict, fmt: DBBFormat,
         else costs.get("act_bytes_expanded", costs["act_bytes"])
     )
     wbytes = costs["weight_bytes"] if design.mode != "dense" else costs["dense_weight_bytes"]
+    # the §9 epilogue placement recorded in the cost dict: a fused epilogue
+    # flushes at the next layer's operand width with zero standalone
+    # passes; unfused charges the dequant/bias/ReLU/requant round trips.
+    obytes = costs.get("out_bytes", 0)
+    epi_bytes = costs.get("epilogue_bytes", 0)
     # mode-aware occupancy: a dense SA runs all dense MACs; fixed DBB is
     # capped at its design point; only VDBB tracks the model's nnz/bz
     # (same dispatch as speedup()/effective_tops()).
@@ -308,6 +313,10 @@ def conv_workload(design: STAConfig, costs: dict, fmt: DBBFormat,
         energy_j=power_w * time_s,
         act_bytes=int(act_bytes),
         weight_bytes=int(wbytes),
+        out_bytes=int(obytes),
+        epilogue_bytes=int(epi_bytes),
+        epilogue_fused=bool(costs.get("epilogue_fused", False)),
+        hbm_bytes_total=int(act_bytes + wbytes + obytes + epi_bytes),
         sram_reads_saved=costs.get("im2col_magnification", 1.0) if design.im2col else 1.0,
         effective_tops=costs["effective_ops"] / max(time_s, 1e-30) / 1e12,
         act_sparsity=act_sparsity,

@@ -69,6 +69,24 @@ def dynamic_act_scale(x: jax.Array) -> jax.Array:
     return jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12) / QMAX
 
 
+def resolve_quant_input(x: jax.Array, act_scale):
+    """(int8 codes, scale) for a quantized serving path — the single
+    entry-side rule shared by `kernels.ops` and the layers' `quant_serve`:
+    fp input is quantized per-tensor (calibrated ``act_scale`` or dynamic
+    when None); an **int8** input is already the previous layer's
+    requantized codes (int8-resident chaining, DESIGN.md §9) and must
+    come with the static scale it was quantized at."""
+    if x.dtype == jnp.int8:
+        if act_scale is None:
+            raise ValueError(
+                "int8-resident input needs its activation scale: pass the "
+                "calibrated act_scale the codes were quantized with"
+            )
+        return x, act_scale
+    s_a = dynamic_act_scale(x) if act_scale is None else act_scale
+    return quantize(x, s_a), s_a
+
+
 def act_scale_from_stats(stats) -> float:
     """Static per-tensor scale from calibration :class:`ActStats` —
     the measure→gate→account pipeline doubles as the calibration pass

@@ -26,6 +26,7 @@ from repro.core.quant import (
     quant_conv_ref,
     quantize as quantize_array,
     quantize_dbb,
+    resolve_quant_input,
 )
 from repro.core.sparse_linear import PruneSchedule
 from repro.core.vdbb import (
@@ -136,6 +137,41 @@ class DBBConv2d:
         return quant_conv_ref(
             quantize_array(x, s_a), qw, self.kh, self.kw, s_a,
             stride=_pair(self.stride), padding=self.padding,
+        )
+
+    def quant_serve(self, params: dict, x: jax.Array, *, relu: bool = False,
+                    out_scale=None) -> jax.Array:
+        """One-kernel INT8 serving conv with the fused epilogue (§9).
+
+        The whole layer — int8 conv, dequant, bias (from ``params``),
+        optional ReLU, optional requantize at ``out_scale`` (the *next*
+        layer's calibrated activation scale) — is a single kernel call
+        (Pallas) or a single integer-oracle + :func:`quant_epilogue_ref`
+        pass (ref mode). ``x`` may be fp (quantized at the calibrated
+        ``aq`` or dynamically) or already int8-resident codes from the
+        previous layer's epilogue (requires a calibrated ``aq``). Returns
+        int8 codes when ``out_scale`` is given, fp32 otherwise.
+        """
+        qw = params["w"]
+        aq = params.get("aq")
+        b = params.get("b")
+        if self.kernel_mode == "pallas":
+            from repro.kernels import ops  # deferred: kernels are optional
+
+            return ops.quant_conv(
+                x, qw, self.kh, self.kw, aq, bias=b, relu=relu,
+                out_scale=out_scale, stride=_pair(self.stride),
+                padding=self.padding,
+            )
+        from repro.kernels.ref import quant_epilogue_ref, sparse_conv_int_ref
+
+        xq, s_a = resolve_quant_input(x, aq)
+        acc = sparse_conv_int_ref(
+            xq, qw.as_dbb(), self.kh, self.kw,
+            stride=_pair(self.stride), padding=self.padding,
+        )
+        return quant_epilogue_ref(
+            acc, s_a * qw.scales, bias=b, relu=relu, out_scale=out_scale
         )
 
     # ------------------------------------------------------------------

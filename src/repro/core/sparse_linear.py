@@ -25,9 +25,11 @@ import jax.numpy as jnp
 from repro.core.quant import (
     QuantDBBWeight,
     dynamic_act_scale,
+    int_matmul_ref,
     quant_matmul_ref,
     quantize as quantize_array,
     quantize_dbb,
+    resolve_quant_input,
 )
 from repro.core.vdbb import (
     DBBFormat,
@@ -93,10 +95,16 @@ class DBBLinear:
             y = y + params["b"].astype(y.dtype)
         return y
 
+    def _use_pallas(self, m: int) -> bool:
+        """Pallas serving path, with the tiny-M reference fallback: below
+        the MXU sublane (8 rows) a Pallas launch wastes the array, so the
+        classifier-head-sized GEMMs stay on the jnp reference."""
+        return self.kernel_mode == "pallas" and m >= 8
+
     def _compressed_matmul(self, x: jax.Array, w: DBBWeight) -> jax.Array:
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
-        if self.kernel_mode == "pallas":
+        if self._use_pallas(x2.shape[0]):
             from repro.kernels import ops  # deferred: kernels are optional
 
             y2 = ops.vdbb_matmul(x2, w)
@@ -112,12 +120,41 @@ class DBBLinear:
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
         s_a = dynamic_act_scale(x2) if aq is None else aq
-        if self.kernel_mode == "pallas":
+        if self._use_pallas(x2.shape[0]):
             from repro.kernels import ops  # deferred: kernels are optional
 
             y2 = ops.quant_matmul(x2, qw, s_a)
         else:
             y2 = quant_matmul_ref(quantize_array(x2, s_a), qw, s_a)
+        return y2.reshape(*lead, self.out_features)
+
+    def quant_serve(self, params: dict, x: jax.Array, *, relu: bool = False,
+                    out_scale=None) -> jax.Array:
+        """One-kernel INT8 serving GEMM with the fused epilogue (§9).
+
+        Mirrors :meth:`DBBConv2d.quant_serve`: int8 GEMM, dequant, bias,
+        optional ReLU and requantize at ``out_scale`` in a single kernel
+        (Pallas) or one integer-oracle + ``quant_epilogue_ref`` pass (ref
+        mode / tiny-M fallback). ``x`` may be fp or int8-resident codes
+        (the latter requires a calibrated ``aq``).
+        """
+        qw = params["w"]
+        aq = params.get("aq")
+        b = params.get("b")
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        if self._use_pallas(x2.shape[0]):
+            from repro.kernels import ops  # deferred: kernels are optional
+
+            y2 = ops.quant_matmul(x2, qw, aq, bias=b, relu=relu, out_scale=out_scale)
+        else:
+            from repro.kernels.ref import quant_epilogue_ref
+
+            xq, s_a = resolve_quant_input(x2, aq)
+            acc = int_matmul_ref(xq, dbb_decode(qw.as_dbb()))
+            y2 = quant_epilogue_ref(
+                acc, s_a * qw.scales, bias=b, relu=relu, out_scale=out_scale
+            )
         return y2.reshape(*lead, self.out_features)
 
     # ------------------------------------------------------------------

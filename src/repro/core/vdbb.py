@@ -293,7 +293,7 @@ def _act_sparsity_frac(act) -> Optional[float]:
 
 def dbb_gemm_costs(m: int, k: int, n: int, fmt: DBBFormat, bits: int = 8,
                    *, act=None, act_bits: Optional[int] = None,
-                   out_bits: int = 32) -> dict:
+                   out_bits: int = 32, epilogue_fused: bool = False) -> dict:
     """Analytic cost of one M×K×N GEMM under VDBB, paper-style accounting.
 
     'cycles' follows the time-unrolled occupancy: nnz cycles per block
@@ -304,6 +304,18 @@ def dbb_gemm_costs(m: int, k: int, n: int, fmt: DBBFormat, bits: int = 8,
     (DESIGN.md §8), 16 models a bf16 run of the same kernels — int8 halves
     every operand stream relative to bf16. ``out_bits`` is the accumulator
     flush width (32 for both the int32 and fp32 accumulators).
+
+    ``epilogue_fused`` (DESIGN.md §9) accounts the layer epilogue's
+    placement, assuming the standard serving-layer epilogue (bias + ReLU,
+    plus requantization on the int8 path — what `SparseCNN` layers run;
+    a bare GEMM with no epilogue should ignore ``epilogue_bytes``):
+    fused, the requantizer sits on the accumulator flush, so the output
+    stream is ``act_bits`` wide (int8 straight to the next layer) and
+    ``epilogue_bytes`` is 0; unfused, the flush is ``out_bits`` wide and
+    ``epilogue_bytes`` charges the standalone bias/ReLU pass over the
+    full fp32 tensor plus — only when ``act_bits < out_bits`` — the
+    requant/cast pass to the next layer's operand width. That is the
+    traffic the fusion deletes.
 
     ``act`` (optional) is the layer's activation sparsity — a scalar or a
     measured :class:`repro.core.act_sparsity.ActStats`. When given, the
@@ -325,7 +337,20 @@ def dbb_gemm_costs(m: int, k: int, n: int, fmt: DBBFormat, bits: int = 8,
     hw_macs = m * (nb * fmt.nnz + rem) * n
     wbytes = (nb * (fmt.nnz * bits + fmt.bz) + rem * (bits + 1)) * n / 8
     abytes = m * k * act_bits / 8
-    obytes = m * n * out_bits / 8  # int32/fp32 accumulators
+    if epilogue_fused:
+        obytes = m * n * act_bits / 8  # flush at the next layer's width
+        epi_bytes = 0
+    else:
+        obytes = m * n * out_bits / 8  # int32/fp32 accumulator flush
+        # standalone epilogue passes over the fp32 activation tensor:
+        # bias/ReLU (read + write fp32), plus — only when the next layer's
+        # operand is narrower than the accumulator — a requant/cast pass
+        # (read fp32 + write the act_bits-wide stream). A pure-fp32 model
+        # has no requant pass and is charged none.
+        epi_bytes = m * n * (4 + 4)
+        if act_bits < out_bits:
+            epi_bytes += m * n * (4 + act_bits / 8)
+        epi_bytes = int(epi_bytes)
     act_sp = _act_sparsity_frac(act)
     measured = hasattr(act, "sparsity")
     if act_sp is None:
@@ -340,6 +365,8 @@ def dbb_gemm_costs(m: int, k: int, n: int, fmt: DBBFormat, bits: int = 8,
         weight_bytes=int(wbytes),
         act_bytes=int(abytes),
         out_bytes=int(obytes),
+        epilogue_fused=epilogue_fused,
+        epilogue_bytes=epi_bytes,
         weight_compression=fmt.compression_ratio(bits),
         act_sparsity=act_sp,
         act_measured=measured,
@@ -364,13 +391,15 @@ def dbb_conv_costs(
     act_bits: Optional[int] = None,
     im2col_unit: bool = True,
     act=None,
+    epilogue_fused: bool = False,
 ) -> dict:
     """Analytic cost of one NHWC conv under VDBB + hardware IM2COL.
 
     ``act``: this layer's activation sparsity (scalar or measured
     ``ActStats``), forwarded to :func:`dbb_gemm_costs`; ``bits`` /
     ``act_bits`` are the weight / activation operand widths (int8 vs bf16
-    streams), also forwarded.
+    streams), and ``epilogue_fused`` the epilogue placement (DESIGN.md
+    §9), also forwarded.
 
     The conv is the M×K×N GEMM with M = n·ho·wo, K = kh·kw·c, N = f
     (exactly what the fused kernel executes), composed with the IM2COL
@@ -391,7 +420,8 @@ def dbb_conv_costs(
 
     _, _, (ho, wo) = conv_geometry(h, w, kh, kw, (sh, sw), padding)
     m, k = n * ho * wo, kh * kw * c
-    costs = dbb_gemm_costs(m, k, f, fmt, bits, act=act, act_bits=act_bits)
+    costs = dbb_gemm_costs(m, k, f, fmt, bits, act=act, act_bits=act_bits,
+                           epilogue_fused=epilogue_fused)
     act_bits = costs["act_bits"]
     raw_act = n * h * w * c * act_bits / 8
     expanded_act = m * k * act_bits / 8

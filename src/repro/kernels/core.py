@@ -11,20 +11,28 @@ array's *output-stationary* dataflow (DESIGN.md §2, §6):
 * every other grid axis picks an output tile.
 
 This module owns that plumbing once: the init/accumulate/store pattern
-(:func:`os_accumulate`), K-innermost grid construction and the fp32 VMEM
+(:func:`os_accumulate`), the fused flush epilogue (:class:`Epilogue` /
+:func:`epilogue_plan` / :func:`split_epilogue` — dequant scale, bias, ReLU,
+requantize-to-int8, all executed once where the hardware's requantizer
+sits, DESIGN.md §9), K-innermost grid construction and the fp32 VMEM
 scratch + output BlockSpec boilerplate (:func:`os_matmul_call`), tile-size
-resolution (:func:`resolve_tile`), and interpret-mode dispatch
-(:func:`default_interpret` — kernels validate in interpret mode on CPU and
-compile unchanged on TPU).
+resolution (:func:`resolve_tile` strict / :func:`pick_tile` permissive),
+and interpret-mode dispatch (:func:`default_interpret` — kernels validate
+in interpret mode on CPU and compile unchanged on TPU).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+QMAX = 127  # symmetric int8 clip range for the requantize epilogue
+            # (mirrors repro.core.quant.QMAX; kernels.core deliberately
+            # keeps zero repro-internal imports)
 
 
 def default_interpret() -> bool:
@@ -44,6 +52,36 @@ def resolve_tile(dim: int, tile: int, name: str = "tile") -> int:
     return t
 
 
+def pick_tile(dim: int, tile: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``tile`` — the permissive
+    fallback for *default* tile sizes, so odd CNN shapes (e.g. M = N·Ho·Wo
+    not a multiple of 128) work without hand-tuned tiles at every call
+    site. Explicit tile requests keep :func:`resolve_tile`'s strict
+    divisibility contract.
+
+    When no usable divisor exists near the default (e.g. a prime dim),
+    a sub-sublane tile would launch a pathological 1-wide grid; the whole
+    dimension becomes one tile instead — correct everywhere, and far
+    better than t=1 on real hardware. Dimensions too large for a single
+    VMEM tile *and* without divisors still want an explicit tile.
+    """
+    t = max(1, min(tile, dim))
+    while dim % t:
+        t -= 1
+    if t < 8 <= dim:
+        return dim
+    return t
+
+
+def resolve_or_pick(dim: int, tile, default: int, name: str) -> int:
+    """``tile`` is None → :func:`pick_tile` of the default; otherwise the
+    strict :func:`resolve_tile` (an explicit request that does not divide
+    is still a caller error)."""
+    if tile is None:
+        return pick_tile(dim, default)
+    return resolve_tile(dim, tile, name)
+
+
 def acc_dtype_for(operand_dtype) -> jnp.dtype:
     """Accumulator dtype for an operand dtype: exact int32 for integer
     (int8) operands, fp32 otherwise — the two accumulators the hardware
@@ -53,7 +91,87 @@ def acc_dtype_for(operand_dtype) -> jnp.dtype:
     return jnp.dtype(jnp.float32)
 
 
-def os_accumulate(acc_ref, o_ref, contribution, *, grid_axis: int, scale=None):
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Static plan of the fused accumulator-flush epilogue (DESIGN.md §9).
+
+    Flags name which fused operands ride after the compute operands — in
+    (scale, bias, out_scale) order, each a (1, N) fp32 row — plus the
+    static ReLU flag. Built host-side by :func:`epilogue_plan`, consumed
+    kernel-side by :func:`split_epilogue`; hashable, so it threads into
+    kernels via ``functools.partial``.
+    """
+
+    has_scale: bool = False
+    has_bias: bool = False
+    relu: bool = False
+    has_out_scale: bool = False
+
+    @property
+    def n_operands(self) -> int:
+        return int(self.has_scale) + int(self.has_bias) + int(self.has_out_scale)
+
+
+def epilogue_plan(n: int, bn: int, *, scales=None, bias=None, relu=False,
+                  out_scale=None, acc_dtype, in_dtype, out_dtype=None):
+    """Resolve the fused-epilogue request into kernel-launch pieces.
+
+    Returns ``(ep, operands, specs, out_dtype)``: the static
+    :class:`Epilogue` (None when nothing was requested), the (1, n) fp32
+    operand rows (a scalar ``out_scale`` broadcasts across N) with their
+    (1, bn) BlockSpecs indexed on the N grid axis, and the resolved output
+    dtype — int8 when requantizing, fp32 when scale/bias/ReLU touch the
+    accumulator, else the raw accumulator dtype (the pre-epilogue default).
+    """
+    ep = Epilogue(scales is not None, bias is not None, bool(relu),
+                  out_scale is not None)
+    operands, specs = [], []
+    spec = pl.BlockSpec((1, bn), lambda i, j, s: (0, j))
+    for v, present in ((scales, ep.has_scale), (bias, ep.has_bias),
+                       (out_scale, ep.has_out_scale)):
+        if present:
+            row = jnp.asarray(v, jnp.float32).reshape(1, -1)
+            operands.append(jnp.broadcast_to(row, (1, n)))
+            specs.append(spec)
+    if out_dtype is None:
+        if ep.has_out_scale:
+            out_dtype = jnp.int8
+        elif ep.has_scale or ep.has_bias:
+            out_dtype = jnp.float32  # dequant/bias move the tile to fp32
+        elif acc_dtype == jnp.dtype(jnp.int32):
+            out_dtype = jnp.int32  # raw (or relu-only) int32 stays exact
+        else:
+            out_dtype = in_dtype
+    if not (ep.n_operands or ep.relu):
+        ep = None
+    return ep, operands, specs, out_dtype
+
+
+def split_epilogue(ep: Epilogue | None, rest):
+    """Split a kernel's trailing refs into flush kwargs + (o_ref, acc_ref).
+
+    ``rest`` is ``[*epilogue_refs, o_ref, acc_ref]`` with the epilogue
+    refs in (scale, bias, out_scale) order, exactly as
+    :func:`epilogue_plan` appended them. Returns ``(flush, o_ref,
+    acc_ref)`` where ``flush`` feeds straight into
+    ``os_accumulate(..., **flush)``.
+    """
+    n = ep.n_operands if ep is not None else 0
+    refs = list(rest[:n])
+    o_ref, acc_ref = rest[n], rest[n + 1]
+    flush = dict(
+        scale=refs.pop(0)[...] if ep is not None and ep.has_scale else None,
+        bias=refs.pop(0)[...] if ep is not None and ep.has_bias else None,
+        relu=ep is not None and ep.relu,
+    )
+    flush["out_scale"] = (
+        refs.pop(0)[...] if ep is not None and ep.has_out_scale else None
+    )
+    return flush, o_ref, acc_ref
+
+
+def os_accumulate(acc_ref, o_ref, contribution, *, grid_axis: int, scale=None,
+                  bias=None, relu: bool = False, out_scale=None):
     """Output-stationary accumulation step.
 
     Zeroes ``acc_ref`` on the first step of the reduction grid axis
@@ -63,10 +181,16 @@ def os_accumulate(acc_ref, o_ref, contribution, *, grid_axis: int, scale=None):
     have a different (same-size) shape — e.g. a conv output tile with
     leading batch dim — and the accumulator is reshaped on store.
 
-    ``scale`` (optional, fp32, broadcastable to the accumulator tile —
-    e.g. a (1, bn) per-output-column row) is the dequantization fused into
-    the flush: the int32 accumulator is multiplied once per output element
-    exactly where the hardware's requantizer sits (DESIGN.md §8).
+    The optional epilogue (DESIGN.md §9) runs once on the flush, in
+    dataflow order — exactly where the hardware's requantizer sits:
+
+    * ``scale`` (fp32, broadcastable, e.g. a (1, bn) per-output-column
+      row): dequantization — the int32 accumulator becomes fp32 · scale.
+    * ``bias`` (fp32 row): per-output-channel bias add.
+    * ``relu`` (static): clamp at zero.
+    * ``out_scale`` (fp32 row): requantize-to-int8 — the next layer's
+      activation scale; the store clips round(acc / out_scale) into
+      ±QMAX so inter-layer activations stay int8-resident.
     """
 
     @pl.when(pl.program_id(grid_axis) == 0)
@@ -80,6 +204,13 @@ def os_accumulate(acc_ref, o_ref, contribution, *, grid_axis: int, scale=None):
         acc = acc_ref[...]
         if scale is not None:
             acc = acc.astype(jnp.float32) * scale
+        if bias is not None:
+            acc = acc.astype(jnp.float32) + bias
+        if relu:
+            acc = jnp.maximum(acc, jnp.zeros((), acc.dtype))
+        if out_scale is not None:
+            acc = jnp.clip(jnp.round(acc.astype(jnp.float32) / out_scale),
+                           -QMAX, QMAX)
         o_ref[...] = acc.reshape(o_ref.shape).astype(o_ref.dtype)
 
 

@@ -70,9 +70,12 @@ def conv_out_spec(geom, bf):
     )
 
 
-def _im2col_conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, kw, sh, sw, bh, bw):
+def _im2col_conv_kernel(x_ref, w_ref, *rest, kw, sh, sw, bh, bw, ep=None):
     """Grid: (N·th·tw, F/bf, kh·kw). x: (1, bh_in, bw_in, C); w: (1, C, bf).
-    One kernel tap per innermost grid step — the shifted-view im2col."""
+    One kernel tap per innermost grid step — the shifted-view im2col;
+    ``rest`` carries the optional (1, bf) fp32 epilogue rows named by the
+    static ``ep`` (scale/bias/out_scale — DESIGN.md §9)."""
+    flush, o_ref, acc_ref = core.split_epilogue(ep, rest)
     t = pl.program_id(2)
     patch = core.conv_patch(x_ref[0], t // kw, t % kw, bh=bh, bw=bw, sh=sh, sw=sw)
     contrib = jax.lax.dot(
@@ -80,42 +83,54 @@ def _im2col_conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, kw, sh, sw, bh, bw):
         w_ref[0].astype(patch.dtype),
         preferred_element_type=core.acc_dtype_for(patch.dtype),
     )
-    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2)
+    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2, **flush)
 
 
 def im2col_conv(
     x: jax.Array,
     w: jax.Array,
     *,
+    scales: jax.Array | None = None,
+    bias: jax.Array | None = None,
+    relu: bool = False,
+    out_scale=None,
     stride=1,
     padding="SAME",
-    bf: int = 128,
+    bf: int | None = None,
     tile_h: int | None = None,
     tile_w: int | None = None,
     interpret: bool | None = True,
 ) -> jax.Array:
-    """Fused im2col conv. x: (N, H, W, C); w: (kh, kw, C, F)."""
+    """Fused im2col conv. x: (N, H, W, C); w: (kh, kw, C, F). The optional
+    epilogue (``scales``/``bias``/``relu``/``out_scale``, DESIGN.md §9)
+    fuses the layer's bias + ReLU + requantize-to-int8 into the flush, so
+    even the fp32 stem of an int8-resident model is one kernel."""
     n, h, wd, c = x.shape
     kh, kw, wc, f = w.shape
     if wc != c:
         raise ValueError(f"channel mismatch: x has {c}, w has {wc}")
     xt, g = plan_conv(x, kh, kw, stride=stride, padding=padding, tile_h=tile_h, tile_w=tile_w)
-    bf = core.resolve_tile(f, bf, "bf")
+    bf = core.resolve_or_pick(f, bf, 128, "bf")
     w3 = w.reshape(kh * kw, c, f)
     grid = (n * g["th"] * g["tw"], f // bf, kh * kw)
     acc_dtype = core.acc_dtype_for(x.dtype)  # int32 on the int8 path (§8)
-    out_dtype = jnp.int32 if acc_dtype == jnp.int32 else x.dtype
+    ep, e_ops, e_specs, out_dtype = core.epilogue_plan(
+        f, bf, scales=scales, bias=bias, relu=relu, out_scale=out_scale,
+        acc_dtype=acc_dtype, in_dtype=x.dtype,
+    )
     return pl.pallas_call(
         functools.partial(
-            _im2col_conv_kernel, kw=kw, sh=g["sh"], sw=g["sw"], bh=g["bh"], bw=g["bw"]
+            _im2col_conv_kernel, kw=kw, sh=g["sh"], sw=g["sw"], bh=g["bh"],
+            bw=g["bw"], ep=ep,
         ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, g["bh_in"], g["bw_in"], c), lambda p, j, t: (p, 0, 0, 0)),
             pl.BlockSpec((1, c, bf), lambda p, j, t: (t, 0, j)),
+            *e_specs,
         ],
         out_specs=conv_out_spec(g, bf),
         out_shape=jax.ShapeDtypeStruct((n, g["ho"], g["wo"], f), out_dtype),
         scratch_shapes=[pltpu.VMEM((g["bh"] * g["bw"], bf), acc_dtype)],
         interpret=core.resolve_interpret(interpret),
-    )(xt, w3)
+    )(xt, w3, *e_ops)

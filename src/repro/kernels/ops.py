@@ -10,6 +10,14 @@ accumulation — and return the raw int32 accumulator; the quantized
 end-to-end path (`quant_matmul` / `quant_conv`) additionally quantizes the
 fp activation per-tensor and fuses the dequantization into the accumulator
 flush via the kernels' ``scales`` operand.
+
+Epilogue fusion (DESIGN.md §9): every entry point takes ``bias=``,
+``relu=`` and ``out_scale=`` and folds them into the accumulator flush —
+one kernel per layer. ``out_scale`` (the *next* layer's activation scale)
+requantizes the flush to int8, so inter-layer activations stay
+int8-resident; the quantized entry points also accept an **int8** input
+(already-quantized codes from the previous layer's epilogue) together
+with its ``act_scale``, skipping the per-layer quantize pass entirely.
 """
 from __future__ import annotations
 
@@ -18,7 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QuantDBBWeight, dynamic_act_scale, quantize
+from repro.core.quant import QuantDBBWeight, resolve_quant_input
 from repro.core.vdbb import DBBFormat, DBBWeight
 from repro.kernels import core
 from repro.kernels import im2col_conv as _im2col
@@ -30,11 +38,13 @@ def _default_interpret() -> bool:
     return core.default_interpret()
 
 
-def _matmul_dispatch(a, w, scales, bm, bn, kb, interpret):
+def _matmul_dispatch(a, w, scales, bm, bn, kb, interpret, *, bias=None,
+                     relu=False, out_scale=None):
     """tc vs bw on the weight's pattern-sharing mode (shared by the fp,
     raw-int8 and quantized entry points)."""
     n = w.shape[1]
-    kw = dict(scales=scales, bm=bm, bn=bn, kb=kb, interpret=interpret)
+    kw = dict(scales=scales, bias=bias, relu=relu, out_scale=out_scale,
+              bm=bm, bn=bn, kb=kb, interpret=interpret)
     if w.fmt.group_size(n) == n:
         return _vm.vdbb_matmul_tc(a, w.values, w.indices[:, :, 0], w.fmt, **kw)
     if w.fmt.group_size(n) != 1:
@@ -44,47 +54,60 @@ def _matmul_dispatch(a, w, scales, bm, bn, kb, interpret):
     return _vm.vdbb_matmul_bw(a, w.values, w.indices, w.fmt, **kw)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "kb", "interpret"))
+@functools.partial(jax.jit, static_argnames=("relu", "bm", "bn", "kb", "interpret"))
 def vdbb_matmul(
     a: jax.Array,
     w: DBBWeight,
     *,
-    bm: int = 128,
-    bn: int = 256,
-    kb: int = 8,
+    bias: jax.Array | None = None,
+    relu: bool = False,
+    out_scale=None,
+    bm: int | None = None,
+    bn: int | None = None,
+    kb: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """A (M, K) @ compressed DBB W (K, N) -> (M, N). Dispatches tc vs bw on
     the weight's pattern-sharing mode, and on operand dtype: int8 operands
     run the int32-accumulator datapath and return the raw int32
-    accumulator (quantized end-to-end: :func:`quant_matmul`)."""
+    accumulator (quantized end-to-end: :func:`quant_matmul`). ``bias`` /
+    ``relu`` / ``out_scale`` fuse the fp epilogue into the flush
+    (DESIGN.md §9; int8 out when requantizing)."""
     interpret = _default_interpret() if interpret is None else interpret
-    return _matmul_dispatch(a, w, None, bm, bn, kb, interpret)
+    return _matmul_dispatch(a, w, None, bm, bn, kb, interpret, bias=bias,
+                            relu=relu, out_scale=out_scale)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "kb", "interpret"))
+@functools.partial(jax.jit, static_argnames=("relu", "bm", "bn", "kb", "interpret"))
 def quant_matmul(
     x: jax.Array,
     qw: QuantDBBWeight,
     act_scale: jax.Array | None = None,
     *,
-    bm: int = 128,
-    bn: int = 256,
-    kb: int = 8,
+    bias: jax.Array | None = None,
+    relu: bool = False,
+    out_scale=None,
+    bm: int | None = None,
+    bn: int | None = None,
+    kb: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """fp X (M, K) × int8-quantized compressed W -> fp32 (M, N).
+    """X (M, K) × int8-quantized compressed W -> fp32 (M, N), or int8 when
+    ``out_scale`` is given.
 
-    Quantizes the activation per-tensor (``act_scale`` from calibration,
-    or dynamic from the live batch when None), runs the int8 kernel with
-    the exact int32 accumulator, and dequantizes on the accumulator flush
-    with the fused per-output-column ``act_scale · w_scale[n]``.
+    ``x`` may be fp (quantized per-tensor with ``act_scale`` from
+    calibration, or dynamically when None) or already int8 (the previous
+    layer's requantized codes; ``act_scale`` then required). The whole
+    epilogue — dequant (``act_scale · w_scale[n]``), ``bias``, ``relu``,
+    requantize at ``out_scale`` — runs fused on the accumulator flush
+    (DESIGN.md §9), so one call is one kernel with zero standalone fp32
+    passes.
     """
     interpret = _default_interpret() if interpret is None else interpret
-    s_a = dynamic_act_scale(x) if act_scale is None else act_scale
-    xq = quantize(x, s_a)
+    xq, s_a = resolve_quant_input(x, act_scale)
     scales = s_a * qw.scales
-    return _matmul_dispatch(xq, qw.as_dbb(), scales, bm, bn, kb, interpret)
+    return _matmul_dispatch(xq, qw.as_dbb(), scales, bm, bn, kb, interpret,
+                            bias=bias, relu=relu, out_scale=out_scale)
 
 
 def sparse_matmul(
@@ -112,30 +135,36 @@ def sparse_matmul(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("stride", "padding", "bf", "tile_h", "tile_w", "interpret"),
+    static_argnames=("relu", "stride", "padding", "bf", "tile_h", "tile_w", "interpret"),
 )
 def fused_im2col_conv(
     x: jax.Array,
     w: jax.Array,
     *,
+    bias: jax.Array | None = None,
+    relu: bool = False,
+    out_scale=None,
     stride=1,
     padding="SAME",
-    bf: int = 128,
+    bf: int | None = None,
     tile_h: int | None = None,
     tile_w: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Fused im2col+GEMM conv (NHWC / HWIO), dense weights."""
+    """Fused im2col+GEMM conv (NHWC / HWIO), dense weights. ``bias`` /
+    ``relu`` / ``out_scale`` fuse the layer epilogue into the flush
+    (DESIGN.md §9) — with ``out_scale`` the fp32 stem of an int8-resident
+    model emits int8 directly."""
     interpret = _default_interpret() if interpret is None else interpret
     return _im2col.im2col_conv(
-        x, w, stride=stride, padding=padding, bf=bf,
-        tile_h=tile_h, tile_w=tile_w, interpret=interpret,
+        x, w, bias=bias, relu=relu, out_scale=out_scale, stride=stride,
+        padding=padding, bf=bf, tile_h=tile_h, tile_w=tile_w, interpret=interpret,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kh", "kw", "stride", "padding", "bf", "tile_h", "tile_w", "interpret"),
+    static_argnames=("kh", "kw", "relu", "stride", "padding", "bf", "tile_h", "tile_w", "interpret"),
 )
 def sparse_conv(
     x: jax.Array,
@@ -143,9 +172,12 @@ def sparse_conv(
     kh: int,
     kw: int,
     *,
+    bias: jax.Array | None = None,
+    relu: bool = False,
+    out_scale=None,
     stride=1,
     padding="SAME",
-    bf: int = 128,
+    bf: int | None = None,
     tile_h: int | None = None,
     tile_w: int | None = None,
     interpret: bool | None = None,
@@ -154,17 +186,19 @@ def sparse_conv(
     (K = kh·kw·C along the reduction). Dispatches tc vs bw on the weight's
     pattern-sharing mode — the paper's full datapath in one call. int8
     operands return the raw int32 accumulator (quantized end-to-end:
-    :func:`quant_conv`)."""
+    :func:`quant_conv`); ``bias`` / ``relu`` / ``out_scale`` fuse the fp
+    epilogue into the flush (DESIGN.md §9; int8 out when requantizing)."""
     interpret = _default_interpret() if interpret is None else interpret
     return _vconv.vdbb_im2col_conv(
-        x, w, kh, kw, stride=stride, padding=padding, bf=bf,
-        tile_h=tile_h, tile_w=tile_w, interpret=interpret,
+        x, w, kh, kw, bias=bias, relu=relu, out_scale=out_scale,
+        stride=stride, padding=padding, bf=bf, tile_h=tile_h, tile_w=tile_w,
+        interpret=interpret,
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kh", "kw", "stride", "padding", "bf", "tile_h", "tile_w", "interpret"),
+    static_argnames=("kh", "kw", "relu", "stride", "padding", "bf", "tile_h", "tile_w", "interpret"),
 )
 def quant_conv(
     x: jax.Array,
@@ -173,25 +207,30 @@ def quant_conv(
     kw: int,
     act_scale: jax.Array | None = None,
     *,
+    bias: jax.Array | None = None,
+    relu: bool = False,
+    out_scale=None,
     stride=1,
     padding="SAME",
-    bf: int = 128,
+    bf: int | None = None,
     tile_h: int | None = None,
     tile_w: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """fp NHWC × int8-quantized compressed conv weight -> fp32 NHWC.
+    """NHWC × int8-quantized compressed conv weight -> fp32 NHWC, or int8
+    NHWC when ``out_scale`` is given.
 
-    The conv twin of :func:`quant_matmul`: per-tensor activation
-    quantization (calibrated ``act_scale`` or dynamic), int8 fused
-    IM2COL × VDBB kernel with the int32 accumulator, dequantization fused
-    into the accumulator flush.
+    The conv twin of :func:`quant_matmul`: fp input is quantized
+    per-tensor (calibrated ``act_scale`` or dynamic); int8 input is the
+    previous layer's requantized codes (int8-resident chaining, zero-
+    padding is exact under the symmetric scheme). Dequantization, bias,
+    ReLU and the requantize at ``out_scale`` all fuse into the
+    accumulator flush — one kernel per conv layer (DESIGN.md §9).
     """
     interpret = _default_interpret() if interpret is None else interpret
-    s_a = dynamic_act_scale(x) if act_scale is None else act_scale
-    xq = quantize(x, s_a)
+    xq, s_a = resolve_quant_input(x, act_scale)
     return _vconv.vdbb_im2col_conv(
-        xq, qw.as_dbb(), kh, kw, scales=s_a * qw.scales, stride=stride,
-        padding=padding, bf=bf, tile_h=tile_h, tile_w=tile_w,
-        interpret=interpret,
+        xq, qw.as_dbb(), kh, kw, scales=s_a * qw.scales, bias=bias, relu=relu,
+        out_scale=out_scale, stride=stride, padding=padding, bf=bf,
+        tile_h=tile_h, tile_w=tile_w, interpret=interpret,
     )

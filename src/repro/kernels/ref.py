@@ -53,6 +53,29 @@ def vdbb_matmul_int_ref(a: jax.Array, values: jax.Array, indices: jax.Array,
     return jnp.matmul(a.astype(jnp.int32), dbb_decode(dw).astype(jnp.int32))
 
 
+def quant_epilogue_ref(acc: jax.Array, scale, *, bias=None, relu=False,
+                       out_scale=None) -> jax.Array:
+    """Integer-oracle layer epilogue (DESIGN.md §9): the exact fp32 ops the
+    kernels fuse into the accumulator flush, in dataflow order —
+    dequantize → bias → ReLU → requantize-to-int8.
+
+    ``acc``: raw int32 OS accumulator (last axis = output channels);
+    ``scale``: fused dequant ``act_scale · w_scale[n]``, broadcast on the
+    last axis; ``out_scale``: the next layer's activation scale — when
+    given the result is int8 codes in ±127, bit-exact against the fused
+    kernels. Without it the fp32 epilogue output is returned.
+    """
+    y = acc.astype(jnp.float32) * scale
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    if out_scale is not None:
+        # ±127 == quant.QMAX == kernels.core.QMAX (the symmetric int8 range)
+        return jnp.clip(jnp.round(y / out_scale), -127, 127).astype(jnp.int8)
+    return y
+
+
 def im2col_explicit(x: jax.Array, kh: int, kw: int, *, stride=1, padding="SAME") -> jax.Array:
     """Explicit im2col producing the duplicated (N, Ho, Wo, kh*kw*C) tensor —
     the memory-footprint blow-up the hardware unit avoids."""

@@ -34,7 +34,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.vdbb import DBBFormat, DBBWeight
 from repro.kernels import core
 from repro.kernels.im2col_conv import conv_out_spec, plan_conv
-from repro.kernels.vdbb_matmul import _split_refs, dbb_expand_block
+from repro.kernels.vdbb_matmul import dbb_expand_block
 
 
 def _conv_weight_geometry(dw: DBBWeight, kh: int, kw: int):
@@ -58,12 +58,13 @@ def _conv_weight_geometry(dw: DBBWeight, kh: int, kw: int):
 
 
 def _vdbb_conv_tc_kernel(
-    x_ref, v_ref, idx_ref, *rest, bz, nnz, kw, sh, sw, bh, bw
+    x_ref, v_ref, idx_ref, *rest, bz, nnz, kw, sh, sw, bh, bw, ep=None
 ):
     """Grid: (N·th·tw, F/bf, kh·kw). x: (1, bh_in, bw_in, C);
-    v: (1, cb·nnz, bf); idx: (1, cb, nnz) int32; optional s: (1, bf) fp32
-    dequant scales (int8 path, DESIGN.md §8)."""
-    s_ref, o_ref, acc_ref = _split_refs(rest)
+    v: (1, cb·nnz, bf); idx: (1, cb, nnz) int32; ``rest`` carries the
+    optional (1, bf) fp32 epilogue rows named by the static ``ep``
+    (scale/bias/out_scale — DESIGN.md §9)."""
+    flush, o_ref, acc_ref = core.split_epilogue(ep, rest)
     t = pl.program_id(2)
     patch = core.conv_patch(x_ref[0], t // kw, t % kw, bh=bh, bw=bw, sh=sh, sw=sw)
     c = patch.shape[-1]
@@ -83,8 +84,7 @@ def _vdbb_conv_tc_kernel(
     contrib = jax.lax.dot(
         ac, v_ref[0].astype(a.dtype), preferred_element_type=pref
     )
-    scale = s_ref[...] if s_ref is not None else None
-    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2, scale=scale)
+    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2, **flush)
 
 
 # ---------------------------------------------------------------------------
@@ -93,12 +93,12 @@ def _vdbb_conv_tc_kernel(
 
 
 def _vdbb_conv_bw_kernel(
-    x_ref, v_ref, idx_ref, *rest, bz, nnz, kw, sh, sw, bh, bw
+    x_ref, v_ref, idx_ref, *rest, bz, nnz, kw, sh, sw, bh, bw, ep=None
 ):
     """Grid: (N·th·tw, F/bf, kh·kw). x: (1, bh_in, bw_in, C);
-    v/idx: (1, cb·nnz, bf) — per-column patterns; optional s: (1, bf)
-    fp32 dequant scales (int8 path, DESIGN.md §8)."""
-    s_ref, o_ref, acc_ref = _split_refs(rest)
+    v/idx: (1, cb·nnz, bf) — per-column patterns; ``rest`` carries the
+    optional (1, bf) fp32 epilogue rows named by ``ep`` (DESIGN.md §9)."""
+    flush, o_ref, acc_ref = core.split_epilogue(ep, rest)
     t = pl.program_id(2)
     patch = core.conv_patch(x_ref[0], t // kw, t % kw, bh=bh, bw=bw, sh=sh, sw=sw)
     bf = o_ref.shape[-1]
@@ -111,8 +111,7 @@ def _vdbb_conv_bw_kernel(
         wd.astype(patch.dtype),
         preferred_element_type=core.acc_dtype_for(patch.dtype),
     )
-    scale = s_ref[...] if s_ref is not None else None
-    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2, scale=scale)
+    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2, **flush)
 
 
 # ---------------------------------------------------------------------------
@@ -121,23 +120,24 @@ def _vdbb_conv_bw_kernel(
 
 
 def _launch(kernel, x, operands, wspecs, fmt, kh, kw, *, stride, padding, bf,
-            tile_h, tile_w, out_dtype, interpret, scales=None):
+            tile_h, tile_w, out_dtype, interpret, scales=None, bias=None,
+            relu=False, out_scale=None):
     n = x.shape[0]
     f = operands[0].shape[-1]
     xt, g = plan_conv(x, kh, kw, stride=stride, padding=padding,
                       tile_h=tile_h, tile_w=tile_w)
     grid = (n * g["th"] * g["tw"], f // bf, kh * kw)
     acc_dtype = core.acc_dtype_for(x.dtype)  # int32 on the int8 path
-    if scales is not None:
-        operands = (*operands, scales.astype(jnp.float32).reshape(1, f))
-        wspecs = [*wspecs, pl.BlockSpec((1, bf), lambda p, j, t: (0, j))]
-        out_dtype = out_dtype or jnp.float32
-    elif out_dtype is None:
-        out_dtype = jnp.int32 if acc_dtype == jnp.int32 else x.dtype
+    ep, e_ops, e_specs, out_dtype = core.epilogue_plan(
+        f, bf, scales=scales, bias=bias, relu=relu, out_scale=out_scale,
+        acc_dtype=acc_dtype, in_dtype=x.dtype, out_dtype=out_dtype,
+    )
+    operands = (*operands, *e_ops)
+    wspecs = [*wspecs, *e_specs]
     return pl.pallas_call(
         functools.partial(
             kernel, bz=fmt.bz, nnz=fmt.nnz, kw=kw,
-            sh=g["sh"], sw=g["sw"], bh=g["bh"], bw=g["bw"],
+            sh=g["sh"], sw=g["sw"], bh=g["bh"], bw=g["bw"], ep=ep,
         ),
         grid=grid,
         in_specs=[
@@ -160,9 +160,12 @@ def vdbb_im2col_conv_tc(
     kw: int,
     *,
     scales: jax.Array | None = None,
+    bias: jax.Array | None = None,
+    relu: bool = False,
+    out_scale=None,
     stride=1,
     padding="SAME",
-    bf: int = 128,
+    bf: int | None = None,
     tile_h: int | None = None,
     tile_w: int | None = None,
     out_dtype=None,
@@ -170,12 +173,13 @@ def vdbb_im2col_conv_tc(
 ) -> jax.Array:
     """Fused sparse conv, group-shared patterns. x: (N, H, W, C);
     values: (nb, nnz, F); indices: (nb, nnz) with nb = kh·kw·C/bz.
-    int8 operands accumulate in exact int32; ``scales`` (F,) fuses
-    dequantization into the accumulator flush (out fp32)."""
+    int8 operands accumulate in exact int32; ``scales`` (F,) / ``bias``
+    (F,) / ``relu`` / ``out_scale`` fuse the layer epilogue into the
+    accumulator flush (DESIGN.md §9; out int8 when requantizing)."""
     nb, nnz, f = values.shape
     c = nb * fmt.bz // (kh * kw)
     cb = c // fmt.bz
-    bf = core.resolve_tile(f, bf, "bf")
+    bf = core.resolve_or_pick(f, bf, 128, "bf")
     v = values.reshape(kh * kw, cb * nnz, f)
     idx = indices.astype(jnp.int32).reshape(kh * kw, cb, nnz)
     wspecs = [
@@ -185,7 +189,8 @@ def vdbb_im2col_conv_tc(
     return _launch(
         _vdbb_conv_tc_kernel, x, (v, idx), wspecs, fmt, kh, kw,
         stride=stride, padding=padding, bf=bf, tile_h=tile_h, tile_w=tile_w,
-        out_dtype=out_dtype, interpret=interpret, scales=scales,
+        out_dtype=out_dtype, interpret=interpret, scales=scales, bias=bias,
+        relu=relu, out_scale=out_scale,
     )
 
 
@@ -198,20 +203,23 @@ def vdbb_im2col_conv_bw(
     kw: int,
     *,
     scales: jax.Array | None = None,
+    bias: jax.Array | None = None,
+    relu: bool = False,
+    out_scale=None,
     stride=1,
     padding="SAME",
-    bf: int = 128,
+    bf: int | None = None,
     tile_h: int | None = None,
     tile_w: int | None = None,
     out_dtype=None,
     interpret: bool | None = True,
 ) -> jax.Array:
     """Fused sparse conv, per-column patterns. values/indices: (nb, nnz, F).
-    int8 + ``scales`` as in :func:`vdbb_im2col_conv_tc`."""
+    int8 + epilogue as in :func:`vdbb_im2col_conv_tc`."""
     nb, nnz, f = values.shape
     c = nb * fmt.bz // (kh * kw)
     cb = c // fmt.bz
-    bf = core.resolve_tile(f, bf, "bf")
+    bf = core.resolve_or_pick(f, bf, 128, "bf")
     v = values.reshape(kh * kw, cb * nnz, f)
     idx = indices.astype(jnp.int32).reshape(kh * kw, cb * nnz, f)
     wspecs = [
@@ -221,7 +229,8 @@ def vdbb_im2col_conv_bw(
     return _launch(
         _vdbb_conv_bw_kernel, x, (v, idx), wspecs, fmt, kh, kw,
         stride=stride, padding=padding, bf=bf, tile_h=tile_h, tile_w=tile_w,
-        out_dtype=out_dtype, interpret=interpret, scales=scales,
+        out_dtype=out_dtype, interpret=interpret, scales=scales, bias=bias,
+        relu=relu, out_scale=out_scale,
     )
 
 

@@ -21,10 +21,13 @@ innermost (the systolic array's output-stationary dataflow).
 
 Both accept int8 operands (the ASIC's native precision, DESIGN.md §8):
 integer inputs switch the whole pipeline — one-hot mux, MXU dots, OS
-accumulator — to exact int32 arithmetic, and the optional per-output-column
-``scales`` operand fuses the dequantization into the accumulator flush
-(int32 → fp32 · scale), which is where the hardware's requantizer sits.
-Without ``scales`` the raw int32 accumulator is returned.
+accumulator — to exact int32 arithmetic. The full layer epilogue fuses
+into the accumulator flush (DESIGN.md §9): per-output-column ``scales``
+(dequantization, int32 → fp32 · scale), ``bias``, ``relu``, and
+``out_scale`` (requantize-to-int8 at the next layer's activation scale) —
+exactly where the hardware's requantizer sits, so a whole serving layer
+is one kernel with no standalone fp32 passes after it. Without any
+epilogue the raw int32 accumulator is returned.
 
 Tiling taxonomy (paper's A×B×C_M×N → BlockSpec): bm×bn is the TPE array
 footprint (output tile), bz=B is the block size, kb is how many blocks
@@ -59,19 +62,12 @@ def _check_compressed_operands(a, values, fmt):
 # ---------------------------------------------------------------------------
 
 
-def _split_refs(rest):
-    """(s_ref | None, o_ref, acc_ref) — the optional dequant-scales operand
-    rides last in the input list when present (quantized path)."""
-    if len(rest) == 3:
-        return rest
-    return (None, *rest)
-
-
-def _vdbb_tc_kernel(a_ref, v_ref, idx_ref, *rest, bz, nnz, kb):
+def _vdbb_tc_kernel(a_ref, v_ref, idx_ref, *rest, bz, nnz, kb, ep=None):
     """Grid: (M/bm, N/bn, NB/kb). a: (bm, kb*bz); v: (kb*nnz, bn);
-    idx: (kb, nnz) int32; acc: (bm, bn) f32/i32 VMEM scratch; optional
-    s: (1, bn) fp32 dequant scales (int8 path)."""
-    s_ref, o_ref, acc_ref = _split_refs(rest)
+    idx: (kb, nnz) int32; acc: (bm, bn) f32/i32 VMEM scratch; ``rest``
+    carries the optional (1, bn) fp32 epilogue rows named by the static
+    ``ep`` (scale/bias/out_scale — DESIGN.md §9)."""
+    flush, o_ref, acc_ref = core.split_epilogue(ep, rest)
     bm = a_ref.shape[0]
     pref = core.acc_dtype_for(a_ref.dtype)  # int32 for int8 operands
     a = a_ref[...].reshape(bm, kb, bz)
@@ -89,23 +85,7 @@ def _vdbb_tc_kernel(a_ref, v_ref, idx_ref, *rest, bz, nnz, kb):
     contrib = jax.lax.dot(
         ac, v_ref[...].astype(a.dtype), preferred_element_type=pref
     )
-    scale = s_ref[...] if s_ref is not None else None
-    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2, scale=scale)
-
-
-def _quant_operands(a, scales, out_dtype, bn):
-    """Resolve the int8-path extras: accumulator dtype, default out dtype
-    (fp32 with fused dequant, raw int32 without), and the (1, N) scales
-    operand + BlockSpec to append when ``scales`` is given."""
-    acc = core.acc_dtype_for(a.dtype)
-    if scales is not None:
-        ops = [scales.astype(jnp.float32).reshape(1, -1)]
-        specs = [pl.BlockSpec((1, bn), lambda i, j, s: (0, j))]
-        out = out_dtype or jnp.float32
-    else:
-        ops, specs = [], []
-        out = out_dtype or (jnp.int32 if acc == jnp.int32 else a.dtype)
-    return acc, out, ops, specs
+    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2, **flush)
 
 
 def vdbb_matmul_tc(
@@ -115,27 +95,36 @@ def vdbb_matmul_tc(
     fmt: DBBFormat,
     *,
     scales: jax.Array | None = None,
-    bm: int = 128,
-    bn: int = 256,
-    kb: int = 16,
+    bias: jax.Array | None = None,
+    relu: bool = False,
+    out_scale=None,
+    bm: int | None = None,
+    bn: int | None = None,
+    kb: int | None = None,
     out_dtype=None,
     interpret: bool = True,
 ) -> jax.Array:
     """A (M, K) × compressed W -> (M, N). values: (nb, nnz, N);
     indices: (nb, nnz) int (pattern shared across N). int8 operands
-    accumulate in exact int32; ``scales`` (N,) fuses dequantization into
-    the accumulator flush (out fp32)."""
+    accumulate in exact int32; ``scales`` (N,) / ``bias`` (N,) / ``relu``
+    / ``out_scale`` (scalar or (N,)) fuse the layer epilogue into the
+    accumulator flush (DESIGN.md §9; out int8 when requantizing). Default
+    tiles fall back to the largest dividing size (``core.pick_tile``)."""
     m, k, nb, n = _check_compressed_operands(a, values, fmt)
     bz, nnz = fmt.bz, fmt.nnz
-    bm = core.resolve_tile(m, bm, "bm")
-    bn = core.resolve_tile(n, bn, "bn")
-    kb = core.resolve_tile(nb, kb, "kb")
+    bm = core.resolve_or_pick(m, bm, 128, "bm")
+    bn = core.resolve_or_pick(n, bn, 256, "bn")
+    kb = core.resolve_or_pick(nb, kb, 16, "kb")
     v2 = values.reshape(nb * nnz, n)
     idx = indices.astype(jnp.int32)
-    acc_dtype, out_dtype, s_ops, s_specs = _quant_operands(a, scales, out_dtype, bn)
+    acc_dtype = core.acc_dtype_for(a.dtype)
+    ep, e_ops, e_specs, out_dtype = core.epilogue_plan(
+        n, bn, scales=scales, bias=bias, relu=relu, out_scale=out_scale,
+        acc_dtype=acc_dtype, in_dtype=a.dtype, out_dtype=out_dtype,
+    )
     return core.os_matmul_call(
-        functools.partial(_vdbb_tc_kernel, bz=bz, nnz=nnz, kb=kb),
-        (a, v2, idx, *s_ops),
+        functools.partial(_vdbb_tc_kernel, bz=bz, nnz=nnz, kb=kb, ep=ep),
+        (a, v2, idx, *e_ops),
         m=m,
         n=n,
         bm=bm,
@@ -145,7 +134,7 @@ def vdbb_matmul_tc(
             pl.BlockSpec((bm, kb * bz), lambda i, j, s: (i, s)),
             pl.BlockSpec((kb * nnz, bn), lambda i, j, s: (s, j)),
             pl.BlockSpec((kb, nnz), lambda i, j, s: (s, 0)),
-            *s_specs,
+            *e_specs,
         ],
         out_dtype=out_dtype,
         acc_dtype=acc_dtype,
@@ -172,11 +161,11 @@ def dbb_expand_block(v, idx, bz):
     return wd.reshape(kb * bz, bn)
 
 
-def _vdbb_bw_kernel(a_ref, v_ref, idx_ref, *rest, bz, nnz, kb):
+def _vdbb_bw_kernel(a_ref, v_ref, idx_ref, *rest, bz, nnz, kb, ep=None):
     """Grid: (M/bm, N/bn, NB/kb). a: (bm, kb*bz); v: (kb*nnz, bn);
-    idx: (kb*nnz, bn) int32 — per-column patterns; optional s: (1, bn)
-    fp32 dequant scales (int8 path)."""
-    s_ref, o_ref, acc_ref = _split_refs(rest)
+    idx: (kb*nnz, bn) int32 — per-column patterns; ``rest`` carries the
+    optional (1, bn) fp32 epilogue rows named by ``ep`` (DESIGN.md §9)."""
+    flush, o_ref, acc_ref = core.split_epilogue(ep, rest)
     bn = o_ref.shape[1]
     v = v_ref[...].reshape(kb, nnz, bn)
     idx = idx_ref[...].reshape(kb, nnz, bn)
@@ -186,8 +175,7 @@ def _vdbb_bw_kernel(a_ref, v_ref, idx_ref, *rest, bz, nnz, kb):
         wd.astype(a_ref.dtype),
         preferred_element_type=core.acc_dtype_for(a_ref.dtype),
     )
-    scale = s_ref[...] if s_ref is not None else None
-    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2, scale=scale)
+    core.os_accumulate(acc_ref, o_ref, contrib, grid_axis=2, **flush)
 
 
 def vdbb_matmul_bw(
@@ -197,26 +185,33 @@ def vdbb_matmul_bw(
     fmt: DBBFormat,
     *,
     scales: jax.Array | None = None,
-    bm: int = 128,
-    bn: int = 256,
-    kb: int = 8,
+    bias: jax.Array | None = None,
+    relu: bool = False,
+    out_scale=None,
+    bm: int | None = None,
+    bn: int | None = None,
+    kb: int | None = None,
     out_dtype=None,
     interpret: bool = True,
 ) -> jax.Array:
     """A (M, K) × compressed W -> (M, N). values/indices: (nb, nnz, N).
-    int8 operands accumulate in exact int32; ``scales`` (N,) fuses
-    dequantization into the accumulator flush (out fp32)."""
+    int8 + epilogue (``scales``/``bias``/``relu``/``out_scale``) as in
+    :func:`vdbb_matmul_tc`."""
     m, k, nb, n = _check_compressed_operands(a, values, fmt)
     bz, nnz = fmt.bz, fmt.nnz
-    bm = core.resolve_tile(m, bm, "bm")
-    bn = core.resolve_tile(n, bn, "bn")
-    kb = core.resolve_tile(nb, kb, "kb")
+    bm = core.resolve_or_pick(m, bm, 128, "bm")
+    bn = core.resolve_or_pick(n, bn, 256, "bn")
+    kb = core.resolve_or_pick(nb, kb, 8, "kb")
     v2 = values.reshape(nb * nnz, n)
     idx2 = indices.astype(jnp.int32).reshape(nb * nnz, n)
-    acc_dtype, out_dtype, s_ops, s_specs = _quant_operands(a, scales, out_dtype, bn)
+    acc_dtype = core.acc_dtype_for(a.dtype)
+    ep, e_ops, e_specs, out_dtype = core.epilogue_plan(
+        n, bn, scales=scales, bias=bias, relu=relu, out_scale=out_scale,
+        acc_dtype=acc_dtype, in_dtype=a.dtype, out_dtype=out_dtype,
+    )
     return core.os_matmul_call(
-        functools.partial(_vdbb_bw_kernel, bz=bz, nnz=nnz, kb=kb),
-        (a, v2, idx2, *s_ops),
+        functools.partial(_vdbb_bw_kernel, bz=bz, nnz=nnz, kb=kb, ep=ep),
+        (a, v2, idx2, *e_ops),
         m=m,
         n=n,
         bm=bm,
@@ -226,7 +221,7 @@ def vdbb_matmul_bw(
             pl.BlockSpec((bm, kb * bz), lambda i, j, s: (i, s)),
             pl.BlockSpec((kb * nnz, bn), lambda i, j, s: (s, j)),
             pl.BlockSpec((kb * nnz, bn), lambda i, j, s: (s, j)),
-            *s_specs,
+            *e_specs,
         ],
         out_dtype=out_dtype,
         acc_dtype=acc_dtype,

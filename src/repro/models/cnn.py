@@ -23,9 +23,11 @@ from typing import Any, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant import QuantDBBWeight, quantize
 from repro.core.sparse_conv import DBBConv2d
 from repro.core.sparse_linear import DBBLinear, PruneSchedule
 from repro.core.vdbb import DBBFormat, DENSE
+from repro.kernels.core import _pair
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,7 +90,10 @@ class SparseCNN:
         out.append(
             DBBLinear(
                 prev, c.num_classes, fmt=c.fmt, use_bias=True, dtype=c.dtype,
-                kernel_mode="ref",  # head GEMM: M=batch, tiny — ref path
+                # head GEMM follows the model's kernel mode; DBBLinear
+                # itself falls back to the reference for tiny M (< the
+                # MXU sublane), so small batches never waste a launch.
+                kernel_mode=c.kernel_mode,
             )
         )
         return out
@@ -110,6 +115,7 @@ class SparseCNN:
         *,
         collect_act_stats: bool = False,
         act_threshold: float = 0.0,
+        intermediates: Optional[list] = None,
     ):
         """Inference forward, optionally measuring activation sparsity.
 
@@ -118,8 +124,18 @@ class SparseCNN:
         :class:`repro.core.act_sparsity.ActStats` per layer, measured on
         the activation each layer *reads* (the tensor the IM2COL unit /
         GEMM streams), MAC-weighted for whole-model composition.
+
+        Calibrated quantized params (every compressed layer carrying a
+        static ``aq`` act scale) take the **int8-resident** serving chain
+        (DESIGN.md §9): each layer is one fused kernel whose epilogue
+        requantizes straight to the next layer's int8 codes — no
+        standalone fp32 dequant/ReLU/requant passes between compressed
+        layers. ``intermediates`` (optional list, eager-only) collects
+        each inter-layer activation so callers can assert dtypes.
         """
         layers = self.layers()
+        if not collect_act_stats and self._int8_chain_ready(layers, params):
+            return self._apply_int8_resident(layers, params, x, intermediates)
         stats = []
         if collect_act_stats:
             from repro.core.act_sparsity import measure_activation
@@ -135,6 +151,8 @@ class SparseCNN:
                 )
                 h, w = m.out_hw(h, w)
             x = jax.nn.relu(m(params[f"l{i}"], x))
+            if intermediates is not None:
+                intermediates.append(x)
         x = x.mean(axis=(1, 2))  # global average pool
         head = layers[-1]
         if collect_act_stats:
@@ -148,6 +166,66 @@ class SparseCNN:
         if collect_act_stats:
             return logits, tuple(stats)
         return logits
+
+    # ----------------------------------- int8-resident serving chain (§9)
+    def _int8_chain_ready(self, layers, params: dict) -> bool:
+        """True iff serving can run int8-resident end to end: every
+        compressed conv after the (possibly fp) stem is quantized with a
+        calibrated static ``aq`` (needed both to read int8 codes and as
+        the previous layer's requantize target), and the head is
+        quantized. Anything else falls back to the per-layer fp path."""
+        any_quant = False
+        for i, m in enumerate(layers[:-1]):
+            p = params.get(f"l{i}", {})
+            w = p.get("w")
+            if isinstance(w, QuantDBBWeight):
+                if "aq" not in p:
+                    return False
+                any_quant = True
+            elif i > 0:  # a mid-chain fp layer would need a dequant pass
+                return False
+        head = params.get(f"l{len(layers) - 1}", {})
+        return any_quant and isinstance(head.get("w"), QuantDBBWeight)
+
+    def _apply_int8_resident(self, layers, params: dict, x: jax.Array,
+                             intermediates: Optional[list] = None) -> jax.Array:
+        """One fused kernel per layer, int8 activations in between (§9).
+
+        Every compressed conv consumes the previous layer's int8 codes
+        and its epilogue (dequant · bias · ReLU · requant at the next
+        layer's calibrated scale) emits the next codes straight from the
+        accumulator flush. The fp32 stem fuses bias + ReLU + the first
+        requantize into its own kernel on the Pallas path (one standalone
+        quantize pass on the ref path); the last conv flushes fp32
+        (bias + ReLU still fused) into global average pooling, and the
+        quantized head GEMM (bias fused) produces the fp32 logits.
+        """
+        convs, head = layers[:-1], layers[-1]
+        n = len(convs)
+        for i, m in enumerate(convs):
+            p = params[f"l{i}"]
+            out_scale = params[f"l{i + 1}"]["aq"] if i + 1 < n else None
+            if isinstance(p["w"], QuantDBBWeight):
+                x = m.quant_serve(p, x, relu=True, out_scale=out_scale)
+            elif m.kernel_mode == "pallas" and out_scale is not None:
+                # fp stem, one kernel: dense conv with the fused epilogue
+                from repro.kernels import ops  # deferred: kernels are optional
+
+                x = ops.fused_im2col_conv(
+                    x, p["w"], bias=p.get("b"), relu=True, out_scale=out_scale,
+                    stride=_pair(m.stride), padding=m.padding,
+                )
+            else:
+                # fp stem, ref path: conv (+bias) · ReLU · one int8
+                # quantize at the next layer's calibrated scale — the only
+                # standalone fp32 activation pass in the chain.
+                x = jax.nn.relu(m(p, x))
+                if out_scale is not None:
+                    x = quantize(x, out_scale)
+            if intermediates is not None:
+                intermediates.append(x)
+        x = x.mean(axis=(1, 2))  # global average pool (fp32 flush above)
+        return head.quant_serve(params[f"l{n}"], x)
 
     # ------------------------------------------- the paper's technique
     def constrain(self, params: dict, step=None, schedule: Optional[PruneSchedule] = None) -> dict:
@@ -188,15 +266,17 @@ class SparseCNN:
 
     # ------------------------------------------------------------ costs
     def layer_costs(self, batch: int, *, bits: int = 8, act_bits=None,
-                    stats=None) -> list:
+                    stats=None, epilogue_fused: bool = False) -> list:
         """Per-conv-layer ``dbb_conv_costs`` dicts for this model.
 
         ``stats`` (optional): per-layer ActStats from
         ``apply(collect_act_stats=True)`` — layer i's measured activation
         sparsity is recorded into its cost dict, ready for
         ``energy_model.model_workload``. ``bits``/``act_bits`` are the
-        operand widths (8 = the INT8 serving path of ``quantize()``).
-        Returns (name, costs, fmt) triples.
+        operand widths (8 = the INT8 serving path of ``quantize()``);
+        ``epilogue_fused`` accounts the §9 fused epilogue (int8 flush, no
+        standalone dequant/requant passes). Returns (name, costs, fmt)
+        triples.
         """
         from repro.core.vdbb import dbb_conv_costs
 
@@ -213,7 +293,7 @@ class SparseCNN:
                     dbb_conv_costs(
                         batch, h, w, m.in_channels, m.out_channels, m.kh, m.kw,
                         m.fmt, stride=m.stride, padding=m.padding, bits=bits,
-                        act_bits=act_bits, act=act,
+                        act_bits=act_bits, act=act, epilogue_fused=epilogue_fused,
                     ),
                     m.fmt,
                 )

@@ -1,0 +1,160 @@
+"""Tile autotuner + frozen serving plans: measured win vs pick_tile
+defaults (DESIGN.md §10).
+
+Two workloads, written machine-readable to ``BENCH_autotune.json``:
+
+1. **non-power-of-two GEMM layer set** — shapes whose dimensions have no
+   divisor near the default tiles, so the static ``pick_tile`` heuristic
+   is furthest from optimal. The artifact's ``tuned_us``/``default_us``
+   are the search's interleaved head-to-head **confirmation pass**
+   numbers — real measurements, with ``tuned ≤ default`` enforced as the
+   autotuner's contract (a winner that does not replicate its win is
+   demoted back to the default, so "no win found" records speedup 1.0
+   rather than a regression). An additional independent re-measurement
+   is recorded and sanity-bounded loosely (a shared throttled CPU swings
+   medians by tens of percent between batches; the loose bound still
+   catches a tuner installing catastrophically bad configs).
+
+2. **smoke SparseCNN serving** — the frozen-plan path
+   (``SparseCNN.plan()`` → ``plan.serve``; tuned tiles + staged weight
+   buffers + one jit dispatch) vs the unplanned per-call path
+   (``model.apply(qparams, x)`` at pick_tile defaults: per-call layer
+   rebuild, tile re-resolution, per-op dispatch with the full param
+   tree), measured interleaved. Asserted: plan logits are
+   **bit-identical** to the unplanned §9 int8-resident chain, and the
+   plan — which does strictly less per-call work — is not slower beyond
+   the noise margin.
+"""
+import json
+import pathlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vdbb import DBBFormat, dbb_encode
+from repro.kernels import autotune, core, ops
+from repro.kernels.autotune import interleaved_medians
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_autotune.json"
+# Margins shared with benchmarks/check_regression.py via the committed
+# baselines file, so the bench and the CI gate can never silently disagree.
+_BASELINES = json.loads(
+    (pathlib.Path(__file__).resolve().parent / "bench_baselines.json").read_text()
+)
+NOISE_MARGIN = _BASELINES["autotune_noise_margin"]   # plan vs unplanned slack
+SANITY_MARGIN = _BASELINES["autotune_sanity_margin"]  # independent re-measure bound
+
+# Non-power-of-two GEMM layer set: no divisor near the 128/256 defaults.
+ODD_GEMMS = [
+    (200, 192, 320),
+    (130, 512, 144),
+    (96, 256, 224),
+]
+
+
+def run(report):
+    with tempfile.TemporaryDirectory(prefix="repro_autotune_") as tmp:
+        _run(report, autotune.TuneCache(pathlib.Path(tmp) / "cache.json"))
+
+
+def _run(report, cache):
+    core.clear_tuned()  # measure the true pick_tile baseline
+    results = {
+        "backend": jax.default_backend(),
+        "cache_version": autotune.CACHE_VERSION,
+        "odd_gemms": [],
+        "smoke_cnn": {},
+    }
+
+    # --- 1. non-power-of-two GEMM layer set ------------------------------
+    fmt = DBBFormat(8, 3, "matrix")
+    for m, k, n in ODD_GEMMS:
+        res = autotune.tune_matmul(m, k, n, fmt, top_k=3, reps=3, cache=cache)
+        # the contract the confirmation pass enforces (measured, not assumed)
+        assert res.measured_us <= res.default_us
+        assert res.modeled_best_us <= res.modeled_default_us
+        # independent re-measurement of winner vs default, interleaved —
+        # loosely bounded (this box swings medians by tens of percent)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+        a = jax.random.normal(k1, (m, k))
+        dw = dbb_encode(jax.random.normal(k2, (k, n)), fmt, prune=True)
+        rm_tuned, rm_default = interleaved_medians(
+            lambda: ops.vdbb_matmul(a, dw, **res.tiles),
+            lambda: ops.vdbb_matmul(a, dw, **res.default_tiles),
+            warmup=2, reps=9,
+        )
+        assert rm_tuned <= rm_default * SANITY_MARGIN, \
+            (res.tiles, rm_tuned, rm_default)
+        results["odd_gemms"].append(dict(
+            m=m, k=k, n=n, tiles=res.tiles,
+            tuned_us=round(res.measured_us, 1),
+            default_tiles=res.default_tiles,
+            default_us=round(res.default_us, 1),
+            speedup=round(res.speedup, 3),
+            remeasured_tuned_us=round(rm_tuned, 1),
+            remeasured_default_us=round(rm_default, 1),
+            n_candidates=res.n_candidates,
+        ))
+        report(f"autotune/gemm_{m}x{k}x{n}", res.measured_us,
+               f"default {res.default_us:.0f}us ({res.speedup:.2f}x, "
+               f"confirmed head-to-head; re-measured {rm_tuned:.0f} vs "
+               f"{rm_default:.0f}us), tiles {res.tiles} vs {res.default_tiles}")
+
+    # cache replay: the same query must be search-free and identical
+    replay = autotune.tune_matmul(*ODD_GEMMS[0], fmt, top_k=3, reps=3,
+                                  cache=autotune.TuneCache(cache.path))
+    assert replay.source == "cache" and replay.tiles == results["odd_gemms"][0]["tiles"]
+
+    # --- 2. smoke SparseCNN: frozen plan vs unplanned serving ------------
+    import dataclasses
+
+    from repro.configs import smoke_cnn_config
+    from repro.models.cnn import SparseCNN
+
+    core.clear_tuned()
+    cfg = dataclasses.replace(
+        smoke_cnn_config("sparse-cnn-tiny", sparsity=0.625), kernel_mode="pallas"
+    )
+    model = SparseCNN(cfg)
+    batch = 4
+    params = model.compress(model.init(jax.random.PRNGKey(0)))
+    xb = jax.random.normal(
+        jax.random.PRNGKey(1), (batch, cfg.image_size, cfg.image_size, cfg.in_channels)
+    )
+    _, stats = model.apply(params, xb, collect_act_stats=True)
+    qparams = model.quantize(params, stats)
+
+    ref_logits = model.apply(qparams, xb)  # traced at pick_tile defaults
+    plan = model.plan(qparams, batch=batch, tune="search", cache=cache,
+                      top_k=2, reps=3)
+    got = plan.serve(xb)  # traces the plan while its tuned tiles are installed
+    np.testing.assert_array_equal(  # acceptance: bit-identical serving
+        np.asarray(got), np.asarray(ref_logits)
+    )
+    # the plan carries its tiles frozen in its closures; resetting the
+    # registry (which drops the ops jit caches itself) only makes the
+    # unplanned path really re-resolve pick_tile defaults
+    core.clear_tuned()
+    t_plan, t_default = interleaved_medians(
+        lambda: plan.serve(xb), lambda: model.apply(qparams, xb),
+        warmup=2, reps=9,
+    )
+    assert t_plan <= t_default * NOISE_MARGIN, (t_plan, t_default)
+    results["smoke_cnn"] = dict(
+        batch=batch, plan_us=round(t_plan, 1), default_us=round(t_default, 1),
+        speedup=round(t_default / max(t_plan, 1e-9), 3),
+        tiles=plan.tiles, bit_identical=True,
+    )
+    report("autotune/smoke_cnn_plan", t_plan,
+           f"unplanned apply {t_default:.0f}us "
+           f"({t_default / max(t_plan, 1e-9):.2f}x, re-measured interleaved), "
+           "bit-identical logits")
+
+    OUT_PATH.write_text(json.dumps(results, indent=2))
+    report("autotune/json", 0.0, f"wrote {OUT_PATH.name}")
+
+
+if __name__ == "__main__":
+    run(lambda name, us, derived="": print(f"{name},{us:.1f},{derived}"))

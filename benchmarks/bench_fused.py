@@ -18,26 +18,18 @@ the perf trajectory has data points across PRs:
 """
 import json
 import pathlib
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.timing import median_time_us
 from repro.core import quant
 from repro.core.vdbb import DBBFormat, dbb_conv_costs, dbb_encode_conv
 from repro.kernels import ops
 from repro.xla_utils import cost_analysis_dict
 
 OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_fused.json"
-
-
-def _time_us(fn, *args, reps=3):
-    fn(*args)  # warm up / compile
-    t0 = time.time()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps * 1e6
 
 
 def run(report):
@@ -105,8 +97,8 @@ def run(report):
     )
 
     # --- 3. wall time (interpret mode — relative only) --------------------
-    t_f = _time_us(jax.jit(fused_layer), xq)
-    t_u = _time_us(jax.jit(unfused_layer), xq)
+    t_f = median_time_us(jax.jit(fused_layer), xq, reps=3)
+    t_u = median_time_us(jax.jit(unfused_layer), xq, reps=3)
     results["wall_time_us"] = {"layer_fused": t_f, "layer_unfused": t_u}
     report("fused/conv_layer", t_f, f"unfused {t_u:.0f}us; {derived}")
 
@@ -135,8 +127,8 @@ def run(report):
         / jnp.linalg.norm(per_layer(xb))
     )
     assert rel < 0.01, rel
-    t_c = _time_us(chained, xb)
-    t_p = _time_us(per_layer, xb)
+    t_c = median_time_us(chained, xb, reps=3)
+    t_p = median_time_us(per_layer, xb, reps=3)
     results["wall_time_us"]["cnn_int8_resident"] = t_c
     results["wall_time_us"]["cnn_per_layer_dequant"] = t_p
     report("fused/cnn_forward", t_c,

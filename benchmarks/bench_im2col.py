@@ -11,12 +11,11 @@ compiled datapath program reads as *inputs*:
 
 and verify A == 9x B (minus halo), plus numerics A == B == lax.conv.
 """
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.timing import median_time_us
 from repro.kernels import ops, ref
 
 
@@ -46,19 +45,15 @@ def run(report):
     np.testing.assert_allclose(ya, yr, rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(yb, yr, rtol=2e-4, atol=2e-4)
 
-    fa = jax.jit(gemm)
-    fa(cols, wk).block_until_ready()
-    t0 = time.time()
-    for _ in range(10):
-        fa(cols, wk).block_until_ready()
-    ta = (time.time() - t0) / 10 * 1e6
+    ta = median_time_us(jax.jit(gemm), cols, wk, reps=10)
     report(
         "im2col/pre_expanded_gemm", ta,
         f"datapath reads {act_bytes_a/1e6:.1f}MB activations (stored im2col)",
     )
-    t0 = time.time()
-    ops.fused_im2col_conv(x, wk, bf=f, interpret=True).block_until_ready()
-    tb = (time.time() - t0) * 1e6  # interpret-mode (CPU validation) timing
+    # interpret-mode (CPU validation) timing
+    tb = median_time_us(
+        lambda: ops.fused_im2col_conv(x, wk, bf=f, interpret=True), reps=3
+    )
     report(
         "im2col/fused_late_kernel", tb,
         f"datapath reads {act_bytes_b/1e6:.1f}MB ({magnification:.2f}x magnification; "

@@ -12,11 +12,10 @@ software artifact itself —
 Wall time on CPU (jnp reference path) is reported for completeness;
 TPU-representative performance is the §Roofline analysis.
 """
-import time
-
 import jax
 import jax.numpy as jnp
 
+from benchmarks.timing import median_time_us
 from repro.core import quant
 from repro.core.vdbb import DBBFormat, dbb_encode, dbb_gemm_costs
 from repro.models.common import apply_linear
@@ -30,23 +29,15 @@ def run(report):
     w = jax.random.normal(key, (k, n), jnp.float32)
 
     dense_fn = jax.jit(lambda a, w: a @ w)
-    dense_fn(a, w).block_until_ready()
-    t0 = time.time()
-    for _ in range(5):
-        dense_fn(a, w).block_until_ready()
-    t_dense = (time.time() - t0) / 5 * 1e6
+    t_dense = median_time_us(dense_fn, a, w, reps=5)
     report("vdbb_matmul/dense", t_dense, f"{2*m*k*n/1e9:.2f} GFLOP")
 
     for nnz in (8, 4, 2, 1):
         fmt = DBBFormat(8, nnz, "matrix")
         dw = dbb_encode(w, fmt, prune=True)
         fn = jax.jit(lambda a, dw: apply_linear(a, dw))
-        fn(a, dw).block_until_ready()
         c = cost_analysis_dict(fn.lower(a, dw).compile())
-        t0 = time.time()
-        for _ in range(5):
-            fn(a, dw).block_until_ready()
-        t_us = (time.time() - t0) / 5 * 1e6
+        t_us = median_time_us(fn, a, dw, reps=5)
         costs = dbb_gemm_costs(m, k, n, fmt)
         report(
             f"vdbb_matmul/nnz{nnz}_8",
@@ -66,11 +57,8 @@ def run(report):
             return quant.quant_matmul_ref(quant.quantize(a, s_a), qw, s_a)
 
         fn = jax.jit(q_fn)
-        fn(a, qw, s_a).block_until_ready()
-        t0 = time.time()
-        for _ in range(5):
-            y_q = fn(a, qw, s_a).block_until_ready()
-        t_us = (time.time() - t0) / 5 * 1e6
+        y_q = fn(a, qw, s_a)
+        t_us = median_time_us(fn, a, qw, s_a, reps=5)
         y_fp = apply_linear(a, dw)
         dev = float(jnp.max(jnp.abs(y_q - y_fp)))
         c8 = dbb_gemm_costs(m, k, n, fmt, bits=8, act_bits=8)

@@ -14,12 +14,11 @@ This benchmark measures both boundaries on the actual fused kernel
 and cross-checks the analytic accounting (core.vdbb.dbb_conv_costs +
 benchmarks.roofline.conv_roofline_row) against those measurements.
 """
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.timing import median_time_us
 from repro.core.vdbb import DBBFormat, dbb_conv_costs, dbb_encode_conv
 from repro.kernels import ops, ref
 from repro.kernels.vdbb_im2col_conv import vdbb_im2col_conv_tc
@@ -67,9 +66,11 @@ def run(report):
         flops[nnz] = cost_analysis_dict(compiled)["flops"]
 
         costs = dbb_conv_costs(n, h, w, c, f, kh, kw, fmt, bits=32)
-        t0 = time.time()
-        ops.sparse_conv(x, dw, kh, kw, bf=f, interpret=True).block_until_ready()
-        t_us = (time.time() - t0) * 1e6  # interpret-mode (CPU validation)
+        # interpret-mode (CPU validation) timing
+        t_us = median_time_us(
+            lambda dw=dw: ops.sparse_conv(x, dw, kh, kw, bf=f, interpret=True),
+            reps=3,
+        )
         report(
             f"sparse_conv/nnz{nnz}_8",
             t_us,

@@ -1,0 +1,95 @@
+"""Benchmark-artifact regression gate (CI).
+
+Compares the freshly-written ``BENCH_fused.json`` against the *committed*
+baseline floors in ``benchmarks/bench_baselines.json`` (the generated
+artifacts themselves are gitignored): per-layer fused-epilogue savings
+fractions must not regress below the baseline (small tolerance for
+rounding) and must in any case stay above the §9 acceptance floor of 25%.
+
+``BENCH_autotune.json`` is validated as a second-line gate: the
+confirmation-pass contract (``tuned_us ≤ default_us`` — enforced by the
+search's interleaved head-to-head, with non-replicating winners demoted
+to the default) must hold in the artifact, the independent re-measured
+numbers must stay within a loose sanity margin, and plan serving must
+have been bit-identical. The bench asserts the same things first; this
+gate catches a stale or hand-edited artifact.
+
+Exit code 1 on any regression — run after ``python -m benchmarks.run
+--smoke`` (which rewrites both artifacts).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BASELINES = pathlib.Path(__file__).resolve().parent / "bench_baselines.json"
+_BASE = json.loads(BASELINES.read_text())
+TOLERANCE = 0.02   # absolute saved_frac slack for rounding
+# wall-time margins shared with bench_autotune via the baselines file
+NOISE_MARGIN = _BASE["autotune_noise_margin"]
+SANITY_MARGIN = _BASE["autotune_sanity_margin"]
+HARD_FLOOR = 0.25  # the §9 acceptance criterion, regardless of baseline
+
+
+def check_fused() -> list:
+    errors = []
+    path = ROOT / "BENCH_fused.json"
+    if not path.exists():
+        return [f"{path.name} missing (run `python -m benchmarks.run --smoke`)"]
+    fresh = json.loads(path.read_text())
+    base = _BASE.get("fused_saved_frac", {})
+    for layer in fresh.get("layers", []):
+        name, saved = layer["name"], layer["saved_frac"]
+        if saved < HARD_FLOOR:
+            errors.append(f"fused/{name}: saved_frac {saved:.3f} < hard floor {HARD_FLOOR}")
+        ref = base.get(name)
+        if ref is not None and saved < ref - TOLERANCE:
+            errors.append(
+                f"fused/{name}: saved_frac regressed {ref:.3f} -> {saved:.3f} "
+                f"(tolerance {TOLERANCE}; committed baseline {BASELINES.name})"
+            )
+    return errors
+
+
+def check_autotune() -> list:
+    errors = []
+    path = ROOT / "BENCH_autotune.json"
+    if not path.exists():
+        return []  # informational artifact; bench_autotune asserts on its own
+    data = json.loads(path.read_text())
+    for g in data.get("odd_gemms", []):
+        name = f"autotune/gemm_{g['m']}x{g['k']}x{g['n']}"
+        if g["tuned_us"] > g["default_us"]:
+            errors.append(  # the confirmation-pass contract was violated
+                f"{name}: tuned {g['tuned_us']}us > default {g['default_us']}us"
+            )
+        rt, rd = g.get("remeasured_tuned_us"), g.get("remeasured_default_us")
+        if rt is not None and rd is not None and rt > rd * SANITY_MARGIN:
+            errors.append(
+                f"{name}: independent re-measure {rt}us > {rd}us "
+                f"(sanity margin {SANITY_MARGIN}x)"
+            )
+    cnn = data.get("smoke_cnn") or {}
+    if cnn and cnn["plan_us"] > cnn["default_us"] * NOISE_MARGIN:
+        errors.append(
+            f"autotune/smoke_cnn: plan {cnn['plan_us']}us > unplanned "
+            f"{cnn['default_us']}us (margin {NOISE_MARGIN}x)"
+        )
+    if cnn and not cnn.get("bit_identical", False):
+        errors.append("autotune/smoke_cnn: plan serving not bit-identical")
+    return errors
+
+
+def main() -> int:
+    errors = check_fused() + check_autotune()
+    for e in errors:
+        print(f"REGRESSION: {e}", file=sys.stderr)
+    if not errors:
+        print("benchmark artifacts: no regressions")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -36,6 +36,7 @@ BENCHES = [
     ("kernels (VDBB matmul)", "benchmarks.bench_kernels", False),
     ("quant (INT8 datapath, DESIGN §8)", "benchmarks.bench_quant", True),
     ("fused (epilogue fusion, DESIGN §9)", "benchmarks.bench_fused", True),
+    ("autotune (tile search + frozen plans, DESIGN §10)", "benchmarks.bench_autotune", True),
     ("roofline (EXPERIMENTS §Roofline)", "benchmarks.roofline", True),
 ]
 

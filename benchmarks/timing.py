@@ -1,0 +1,10 @@
+"""Shared wall-time measurement for every ``bench_*`` module.
+
+One harness — warmup (absorbs compile/trace), ``jax.block_until_ready``
+around each timed call, median of k repetitions. The canonical
+implementation lives in :func:`repro.xla_utils.median_time_us` so the
+tile autotuner (``repro.kernels.autotune``) times its candidates through
+the *same* code path and benchmark and tuner numbers are directly
+comparable.
+"""
+from repro.xla_utils import median_time_us  # noqa: F401

@@ -140,7 +140,8 @@ class DBBConv2d:
         )
 
     def quant_serve(self, params: dict, x: jax.Array, *, relu: bool = False,
-                    out_scale=None) -> jax.Array:
+                    out_scale=None, bf=None, tile_h=None,
+                    tile_w=None) -> jax.Array:
         """One-kernel INT8 serving conv with the fused epilogue (§9).
 
         The whole layer — int8 conv, dequant, bias (from ``params``),
@@ -151,6 +152,8 @@ class DBBConv2d:
         ``aq`` or dynamically) or already int8-resident codes from the
         previous layer's epilogue (requires a calibrated ``aq``). Returns
         int8 codes when ``out_scale`` is given, fp32 otherwise.
+        ``bf``/``tile_h``/``tile_w`` pin explicit launch tiles (the §10
+        frozen-plan path); None keeps the registry/pick defaults.
         """
         qw = params["w"]
         aq = params.get("aq")
@@ -161,7 +164,7 @@ class DBBConv2d:
             return ops.quant_conv(
                 x, qw, self.kh, self.kw, aq, bias=b, relu=relu,
                 out_scale=out_scale, stride=_pair(self.stride),
-                padding=self.padding,
+                padding=self.padding, bf=bf, tile_h=tile_h, tile_w=tile_w,
             )
         from repro.kernels.ref import quant_epilogue_ref, sparse_conv_int_ref
 
@@ -173,6 +176,98 @@ class DBBConv2d:
         return quant_epilogue_ref(
             acc, s_a * qw.scales, bias=b, relu=relu, out_scale=out_scale
         )
+
+    # ------------------------------------------------------- frozen plans
+    def make_plan(self, params: dict, *, batch: int, h: int, w: int,
+                  relu: bool = False, out_scale=None, fused: bool = False,
+                  tune: str = "cache", cache=None, top_k: int = 4,
+                  reps: int = 3):
+        """Stage this layer's serving step once (DESIGN.md §10).
+
+        Resolves the tuned tile config for this exact launch signature
+        (autotune registry → persistent cache → optional search, per
+        ``tune`` ∈ {'off', 'cache', 'search'}) and returns ``(run,
+        tiles)``: ``run`` is an ``x -> y`` closure with the weight buffers
+        frozen in that replicates exactly the path ``SparseCNN.apply``
+        takes for these params (``fused=True`` = the §9 int8-resident
+        chain step, so a plan built from calibrated quantized params is
+        bit-identical to the unplanned chain); ``tiles`` is the resolved
+        config (empty on reference/XLA paths).
+        """
+        from repro.kernels.core import conv_geometry, pick_tile
+
+        wp = params["w"]
+        pallas = self.kernel_mode == "pallas"
+        quant = isinstance(wp, QuantDBBWeight)
+        compressed = isinstance(wp, DBBWeight)
+        stem_fused = fused and pallas and out_scale is not None and not (
+            quant or compressed)
+        tiled = pallas and (quant or compressed or stem_fused)
+        tiles: dict = {}
+        if tiled and tune != "off":
+            from repro.kernels import autotune  # deferred: kernels optional
+
+            tiles = autotune.tiles_for_conv(
+                batch, h, w, self.in_channels, self.out_channels, self.kh,
+                self.kw, wp.fmt if (quant or compressed) else None,
+                jnp.int8 if quant else self.dtype, stride=_pair(self.stride),
+                padding=self.padding, mode=tune, cache=cache, top_k=top_k,
+                reps=reps,
+            )
+        if tiled and not tiles:
+            # freeze the pick_tile defaults explicitly, so the staged
+            # closure never depends on ambient registry state at trace time
+            _, _, (ho, wo) = conv_geometry(h, w, self.kh, self.kw,
+                                           self.stride, self.padding)
+            tiles = {"bf": pick_tile(self.out_channels, 128),
+                     "tile_h": ho, "tile_w": wo}
+        if quant and fused:
+            def run(x):
+                return self.quant_serve(params, x, relu=relu,
+                                        out_scale=out_scale, **tiles)
+        elif stem_fused:
+            from repro.kernels import ops  # deferred: kernels are optional
+
+            def run(x):
+                return ops.fused_im2col_conv(
+                    x, params["w"], bias=params.get("b"), relu=relu,
+                    out_scale=out_scale, stride=_pair(self.stride),
+                    padding=self.padding, **tiles,
+                )
+        elif tiled:
+            from repro.kernels import ops  # deferred: kernels are optional
+
+            # mirror __call__'s kernel → +bias order, with the tiles pinned
+            # into the closure (never read from the ambient registry)
+            def run(x):
+                if quant:
+                    y = ops.quant_conv(
+                        x, wp, self.kh, self.kw, params.get("aq"),
+                        stride=_pair(self.stride), padding=self.padding,
+                        **tiles,
+                    )
+                else:
+                    y = ops.sparse_conv(
+                        x, wp, self.kh, self.kw, stride=_pair(self.stride),
+                        padding=self.padding, **tiles,
+                    )
+                if self.use_bias and "b" in params:
+                    y = y + params["b"].astype(y.dtype)
+                if relu:
+                    y = jax.nn.relu(y)
+                if out_scale is not None:
+                    y = quantize_array(y, out_scale)
+                return y
+        else:
+            # reference/XLA path: __call__ applies the bias itself
+            def run(x):
+                y = self(params, x)
+                if relu:
+                    y = jax.nn.relu(y)
+                if out_scale is not None:
+                    y = quantize_array(y, out_scale)
+                return y
+        return run, tiles
 
     # ------------------------------------------------------------------
     def constrain(self, params: dict, step=None, schedule: Optional[PruneSchedule] = None) -> dict:

@@ -129,14 +129,16 @@ class DBBLinear:
         return y2.reshape(*lead, self.out_features)
 
     def quant_serve(self, params: dict, x: jax.Array, *, relu: bool = False,
-                    out_scale=None) -> jax.Array:
+                    out_scale=None, bm=None, bn=None, kb=None) -> jax.Array:
         """One-kernel INT8 serving GEMM with the fused epilogue (§9).
 
         Mirrors :meth:`DBBConv2d.quant_serve`: int8 GEMM, dequant, bias,
         optional ReLU and requantize at ``out_scale`` in a single kernel
         (Pallas) or one integer-oracle + ``quant_epilogue_ref`` pass (ref
         mode / tiny-M fallback). ``x`` may be fp or int8-resident codes
-        (the latter requires a calibrated ``aq``).
+        (the latter requires a calibrated ``aq``). ``bm``/``bn``/``kb``
+        pin explicit launch tiles (the §10 frozen-plan path); None keeps
+        the registry/pick defaults.
         """
         qw = params["w"]
         aq = params.get("aq")
@@ -146,7 +148,8 @@ class DBBLinear:
         if self._use_pallas(x2.shape[0]):
             from repro.kernels import ops  # deferred: kernels are optional
 
-            y2 = ops.quant_matmul(x2, qw, aq, bias=b, relu=relu, out_scale=out_scale)
+            y2 = ops.quant_matmul(x2, qw, aq, bias=b, relu=relu,
+                                  out_scale=out_scale, bm=bm, bn=bn, kb=kb)
         else:
             from repro.kernels.ref import quant_epilogue_ref
 
@@ -156,6 +159,71 @@ class DBBLinear:
                 acc, s_a * qw.scales, bias=b, relu=relu, out_scale=out_scale
             )
         return y2.reshape(*lead, self.out_features)
+
+    # ------------------------------------------------------- frozen plans
+    def make_plan(self, params: dict, *, batch: int, relu: bool = False,
+                  out_scale=None, fused: bool = False, tune: str = "cache",
+                  cache=None, top_k: int = 4, reps: int = 3):
+        """Stage this layer's serving step once (DESIGN.md §10); the GEMM
+        twin of :meth:`DBBConv2d.make_plan`. ``batch`` is the GEMM's M
+        (the tiny-M reference fallback applies, so classifier-head-sized
+        plans carry no tiles). Returns ``(run, tiles)``."""
+        from repro.kernels.core import pick_tile, pick_tile_padded
+
+        wp = params["w"]
+        quant = isinstance(wp, QuantDBBWeight)
+        tiled = self._use_pallas(batch) and isinstance(wp, (DBBWeight, QuantDBBWeight))
+        tiles: dict = {}
+        if tiled and tune != "off":
+            from repro.kernels import autotune  # deferred: kernels optional
+
+            tiles = autotune.tiles_for_matmul(
+                batch, self.in_features, self.out_features, wp.fmt,
+                jnp.int8 if quant else self.dtype,
+                mode=tune, cache=cache, top_k=top_k, reps=reps,
+            )
+        if tiled and not tiles:
+            # freeze the pick_tile defaults explicitly, so the staged
+            # closure never depends on ambient registry state at trace time
+            tc = wp.fmt.group_size(self.out_features) == self.out_features
+            tiles = {"bm": pick_tile_padded(batch, 128)[0],
+                     "bn": pick_tile_padded(self.out_features, 256)[0],
+                     "kb": pick_tile(self.in_features // wp.fmt.bz,
+                                     16 if tc else 8)}
+        if quant and fused:
+            def run(x):
+                return self.quant_serve(params, x, relu=relu,
+                                        out_scale=out_scale, **tiles)
+        elif tiled:
+            from repro.kernels import ops  # deferred: kernels are optional
+
+            # mirror __call__'s GEMM → +bias order, tiles pinned in
+            def run(x):
+                lead = x.shape[:-1]
+                x2 = x.reshape(-1, x.shape[-1])
+                if quant:
+                    y2 = ops.quant_matmul(x2, wp, params.get("aq"), **tiles)
+                else:
+                    y2 = ops.vdbb_matmul(x2, wp, **tiles)
+                y = y2.reshape(*lead, self.out_features)
+                if self.use_bias and "b" in params:
+                    y = y + params["b"].astype(y.dtype)
+                if relu:
+                    y = jax.nn.relu(y)
+                if out_scale is not None:
+                    y = quantize_array(y, out_scale)
+                return y
+        else:
+            # reference path (incl. the tiny-M fallback): __call__ applies
+            # the bias itself
+            def run(x):
+                y = self(params, x)
+                if relu:
+                    y = jax.nn.relu(y)
+                if out_scale is not None:  # mirror the conv twin's fallback
+                    y = quantize_array(y, out_scale)
+                return y
+        return run, tiles
 
     # ------------------------------------------------------------------
     def constrain(self, params: dict, step=None, schedule: Optional[PruneSchedule] = None) -> dict:

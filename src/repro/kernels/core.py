@@ -23,7 +23,7 @@ in interpret mode on CPU and compile unchanged on TPU).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -73,13 +73,139 @@ def pick_tile(dim: int, tile: int) -> int:
     return t
 
 
-def resolve_or_pick(dim: int, tile, default: int, name: str) -> int:
-    """``tile`` is None → :func:`pick_tile` of the default; otherwise the
-    strict :func:`resolve_tile` (an explicit request that does not divide
-    is still a caller error)."""
+def resolve_or_pick(dim: int, tile, default: int, name: str,
+                    tuned: int | None = None) -> int:
+    """``tile`` is None → the ``tuned`` size from the autotune registry when
+    it divides, else :func:`pick_tile` of the default; otherwise the strict
+    :func:`resolve_tile` (an explicit request that does not divide is still
+    a caller error)."""
     if tile is None:
+        if tuned is not None and 0 < tuned <= dim and dim % tuned == 0:
+            return int(tuned)
         return pick_tile(dim, default)
     return resolve_tile(dim, tile, name)
+
+
+def pick_tile_padded(dim: int, tile: int) -> tuple:
+    """``(t, padded_dim)`` — :func:`pick_tile` when it lands on a usable
+    divisor; otherwise the requested tile with the ragged edge zero-padded
+    (the caller pads the operand to ``padded_dim`` and slices the result).
+
+    This is the fix for the divisor-fallback pathology: a dimension like
+    2·p (p prime) has no divisor near the default, and :func:`pick_tile`'s
+    whole-dimension fallback builds one enormous VMEM tile. Padding to the
+    requested tile keeps the grid shape sane at the cost of (padded-dim)/dim
+    wasted compute — exact everywhere, since padded rows/columns are zero.
+    """
+    t = pick_tile(dim, tile)
+    if tile // 4 <= t <= 2 * tile or t == dim <= 2 * tile:
+        return t, dim
+    t = min(tile, dim)
+    return t, -(-dim // t) * t
+
+
+def pad_tile(dim: int, tile, default: int) -> tuple:
+    """Permissive ops-level tile resolution with a zero-pad escape hatch.
+
+    ``(t, padded_dim)``: None → :func:`pick_tile_padded` of the default;
+    an explicit tile is clamped to the dimension, and one that does not
+    divide pads the ragged edge instead of raising (so autotuner
+    candidates are not restricted to exact divisors). Kernel-level
+    wrappers keep :func:`resolve_tile`'s strict contract; only the
+    ``ops.*`` entry points pad-and-slice.
+    """
+    if tile is None:
+        return pick_tile_padded(dim, default)
+    t = max(1, min(int(tile), dim))
+    return t, -(-dim // t) * t
+
+
+# ---------------------------------------------------------------------------
+# Tuned-tile registry (populated by repro.kernels.autotune; kernels.core
+# deliberately keeps zero repro-internal imports, so the registry is a plain
+# dict the autotuner writes into and the kernel entry points read from)
+# ---------------------------------------------------------------------------
+
+KIND_MATMUL_TC = "matmul_tc"
+KIND_MATMUL_BW = "matmul_bw"
+KIND_CONV_TC = "conv_tc"
+KIND_CONV_BW = "conv_bw"
+KIND_CONV_DENSE = "conv_dense"
+
+_TUNED: dict = {}
+
+
+def matmul_sig(m: int, k: int, n: int, bz: int, nnz: int, dtype) -> tuple:
+    """Shape signature of one matmul-shaped launch (kernel kind carried
+    separately): everything tile validity and performance depend on."""
+    return (int(m), int(k), int(n), int(bz), int(nnz), str(jnp.dtype(dtype)))
+
+
+def conv_sig(n: int, ho: int, wo: int, c: int, f: int, kh: int, kw: int,
+             sh: int, sw: int, bz: int, nnz: int, dtype) -> tuple:
+    """Shape signature of one fused-conv launch (``bz = nnz = 0`` for the
+    dense kernel). Output geometry (ho, wo) subsumes the padding mode."""
+    return (int(n), int(ho), int(wo), int(c), int(f), int(kh), int(kw),
+            int(sh), int(sw), int(bz), int(nnz), str(jnp.dtype(dtype)))
+
+
+def lookup_tiles(kind: str, sig: tuple) -> Optional[dict]:
+    """Measured-best tile config for (kind, sig), or None when untuned."""
+    return _TUNED.get((kind, sig))
+
+
+def tuned_conv_tiles(kind: str, sig: tuple, ho: int, wo: int, f: int) -> tuple:
+    """``(bf, tile_h, tile_w)`` from the registry, each component used only
+    when it divides its dimension (conv spatial/F tiles stay exact — the
+    pad-and-slice escape hatch is matmul-only); None components fall back
+    to the callers' defaults."""
+    t = lookup_tiles(kind, sig) or {}
+
+    def ok(v, dim):
+        return int(v) if v and dim % int(v) == 0 else None
+
+    return ok(t.get("bf"), f), ok(t.get("tile_h"), ho), ok(t.get("tile_w"), wo)
+
+
+_INVALIDATION_HOOKS: list = []
+
+
+def register_invalidation_hook(fn) -> None:
+    """Register a callback fired whenever the tuned registry changes.
+
+    Jitted entry points consult the registry only at *trace* time, so a
+    registry change must drop their jit caches or live traces keep stale
+    tile choices. kernels.core keeps zero repro-internal imports, so the
+    ops layer injects its cache-drop here at import.
+    """
+    if fn not in _INVALIDATION_HOOKS:
+        _INVALIDATION_HOOKS.append(fn)
+
+
+def _invalidate_tuned_consumers() -> None:
+    for fn in _INVALIDATION_HOOKS:
+        try:
+            fn()
+        except Exception:  # noqa: BLE001 — cache drop is best-effort
+            pass
+
+
+def set_tuned(kind: str, sig: tuple, tiles: dict) -> None:
+    """Install a tuned config; registering an *unchanged* entry is a no-op
+    (live traces already use it), anything else invalidates the consumers'
+    jit caches so the next call re-consults the registry."""
+    entry = {k: int(v) for k, v in tiles.items() if v is not None}
+    key = (kind, sig)
+    if _TUNED.get(key) == entry:
+        return
+    _TUNED[key] = entry
+    _invalidate_tuned_consumers()
+
+
+def clear_tuned() -> None:
+    if _TUNED:
+        _TUNED.clear()
+        _invalidate_tuned_consumers()
 
 
 def acc_dtype_for(operand_dtype) -> jnp.dtype:

@@ -109,6 +109,10 @@ def im2col_conv(
     kh, kw, wc, f = w.shape
     if wc != c:
         raise ValueError(f"channel mismatch: x has {c}, w has {wc}")
+    if bf is None and tile_h is None and tile_w is None:
+        (sh, sw), _, (ho, wo) = core.conv_geometry(h, wd, kh, kw, stride, padding)
+        sig = core.conv_sig(n, ho, wo, c, f, kh, kw, sh, sw, 0, 0, x.dtype)
+        bf, tile_h, tile_w = core.tuned_conv_tiles(core.KIND_CONV_DENSE, sig, ho, wo, f)
     xt, g = plan_conv(x, kh, kw, stride=stride, padding=padding, tile_h=tile_h, tile_w=tile_w)
     bf = core.resolve_or_pick(f, bf, 128, "bf")
     w3 = w.reshape(kh * kw, c, f)

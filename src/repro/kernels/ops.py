@@ -38,20 +38,71 @@ def _default_interpret() -> bool:
     return core.default_interpret()
 
 
+def _pad_epilogue_row(v, n, n_pad, fill=0.0):
+    """Pad a per-output-column epilogue vector out to the padded N (scalars
+    broadcast unchanged; ``fill`` must be non-zero for ``out_scale`` so the
+    sliced-away columns never divide by zero)."""
+    if v is None:
+        return None
+    v = jnp.asarray(v, jnp.float32)
+    if v.ndim == 0:
+        return v
+    return jnp.pad(v.reshape(-1), (0, n_pad - n), constant_values=fill)
+
+
 def _matmul_dispatch(a, w, scales, bm, bn, kb, interpret, *, bias=None,
                      relu=False, out_scale=None):
     """tc vs bw on the weight's pattern-sharing mode (shared by the fp,
-    raw-int8 and quantized entry points)."""
+    raw-int8 and quantized entry points).
+
+    Tile resolution is permissive here (the ops layer): default tiles come
+    from the autotune registry when a measured-best config is installed for
+    this launch signature, and explicit/tuned ``bm``/``bn`` that do not
+    divide M/N take the pad-to-tile path — the ragged edge is zero-padded
+    and sliced back off, which is exact (padded rows/columns contribute
+    nothing; padded ``out_scale`` columns divide by 1 and are discarded).
+    ``kb`` stays an exact divisor of the K-block count. The kernel-level
+    wrappers keep the strict divisibility contract.
+    """
+    m, k = a.shape
     n = w.shape[1]
+    fmt = w.fmt
+    g = fmt.group_size(n)
+    tc = g == n
+    kind = core.KIND_MATMUL_TC if tc else core.KIND_MATMUL_BW
+    if bm is None and bn is None and kb is None:
+        tuned = core.lookup_tiles(
+            kind, core.matmul_sig(m, k, n, fmt.bz, fmt.nnz, a.dtype)
+        ) or {}
+        bm, bn, kb = tuned.get("bm"), tuned.get("bn"), tuned.get("kb")
+        if kb is not None and (k // fmt.bz) % kb != 0:
+            kb = None  # a tuned K tile must divide exactly; fall back
+    bm, mp = core.pad_tile(m, bm, 128)
+    bn, n_pad = core.pad_tile(n, bn, 256)
+    if mp != m:
+        a = jnp.pad(a, ((0, mp - m), (0, 0)))
+    values = w.values
+    if tc:
+        idx = w.indices[:, :, 0]
+    elif g != 1:
+        # grouped-but-not-matrix: expand indices per column, use bw kernel.
+        idx = jnp.repeat(w.indices, g, axis=2)
+    else:
+        idx = w.indices
+    if n_pad != n:
+        values = jnp.pad(values, ((0, 0), (0, 0), (0, n_pad - n)))
+        if not tc:
+            idx = jnp.pad(idx, ((0, 0), (0, 0), (0, n_pad - n)))
+        scales = _pad_epilogue_row(scales, n, n_pad)
+        bias = _pad_epilogue_row(bias, n, n_pad)
+        out_scale = _pad_epilogue_row(out_scale, n, n_pad, fill=1.0)
     kw = dict(scales=scales, bias=bias, relu=relu, out_scale=out_scale,
               bm=bm, bn=bn, kb=kb, interpret=interpret)
-    if w.fmt.group_size(n) == n:
-        return _vm.vdbb_matmul_tc(a, w.values, w.indices[:, :, 0], w.fmt, **kw)
-    if w.fmt.group_size(n) != 1:
-        # grouped-but-not-matrix: expand indices per column, use bw kernel.
-        idx = jnp.repeat(w.indices, w.fmt.group_size(n), axis=2)
-        return _vm.vdbb_matmul_bw(a, w.values, idx, w.fmt, **kw)
-    return _vm.vdbb_matmul_bw(a, w.values, w.indices, w.fmt, **kw)
+    fn = _vm.vdbb_matmul_tc if tc else _vm.vdbb_matmul_bw
+    y = fn(a, values, idx, fmt, **kw)
+    if mp != m or n_pad != n:
+        y = y[:m, :n]
+    return y
 
 
 @functools.partial(jax.jit, static_argnames=("relu", "bm", "bn", "kb", "interpret"))
@@ -234,3 +285,21 @@ def quant_conv(
         out_scale=out_scale, stride=stride, padding=padding, bf=bf,
         tile_h=tile_h, tile_w=tile_w, interpret=interpret,
     )
+
+
+def _drop_jit_caches() -> None:
+    """Drop every entry point's jit cache. Registered with the kernel core
+    as the tuned-registry invalidation hook: default-tile traces capture
+    registry lookups at trace time, so any registry change must force a
+    retrace (DESIGN.md §10)."""
+    for f in (vdbb_matmul, quant_matmul, fused_im2col_conv, sparse_conv,
+              quant_conv):
+        clear = getattr(f, "clear_cache", None)
+        if callable(clear):
+            try:
+                clear()
+            except Exception:  # noqa: BLE001 — cache drop is best-effort
+                pass
+
+
+core.register_invalidation_hook(_drop_jit_caches)

@@ -119,6 +119,20 @@ def _vdbb_conv_bw_kernel(
 # ---------------------------------------------------------------------------
 
 
+def _tuned_conv_defaults(kind, x, fmt, kh, kw, f, stride, padding,
+                         bf, tile_h, tile_w):
+    """Fill default conv tiles from the autotune registry (measured-best
+    configs installed by ``repro.kernels.autotune``); explicit requests
+    pass through untouched."""
+    if bf is not None or tile_h is not None or tile_w is not None:
+        return bf, tile_h, tile_w
+    n, h, w = x.shape[0], x.shape[1], x.shape[2]
+    c = x.shape[3]
+    (sh, sw), _, (ho, wo) = core.conv_geometry(h, w, kh, kw, stride, padding)
+    sig = core.conv_sig(n, ho, wo, c, f, kh, kw, sh, sw, fmt.bz, fmt.nnz, x.dtype)
+    return core.tuned_conv_tiles(kind, sig, ho, wo, f)
+
+
 def _launch(kernel, x, operands, wspecs, fmt, kh, kw, *, stride, padding, bf,
             tile_h, tile_w, out_dtype, interpret, scales=None, bias=None,
             relu=False, out_scale=None):
@@ -179,6 +193,9 @@ def vdbb_im2col_conv_tc(
     nb, nnz, f = values.shape
     c = nb * fmt.bz // (kh * kw)
     cb = c // fmt.bz
+    bf, tile_h, tile_w = _tuned_conv_defaults(
+        core.KIND_CONV_TC, x, fmt, kh, kw, f, stride, padding, bf, tile_h, tile_w
+    )
     bf = core.resolve_or_pick(f, bf, 128, "bf")
     v = values.reshape(kh * kw, cb * nnz, f)
     idx = indices.astype(jnp.int32).reshape(kh * kw, cb, nnz)
@@ -219,6 +236,9 @@ def vdbb_im2col_conv_bw(
     nb, nnz, f = values.shape
     c = nb * fmt.bz // (kh * kw)
     cb = c // fmt.bz
+    bf, tile_h, tile_w = _tuned_conv_defaults(
+        core.KIND_CONV_BW, x, fmt, kh, kw, f, stride, padding, bf, tile_h, tile_w
+    )
     bf = core.resolve_or_pick(f, bf, 128, "bf")
     v = values.reshape(kh * kw, cb * nnz, f)
     idx = indices.astype(jnp.int32).reshape(kh * kw, cb * nnz, f)

@@ -112,9 +112,14 @@ def vdbb_matmul_tc(
     tiles fall back to the largest dividing size (``core.pick_tile``)."""
     m, k, nb, n = _check_compressed_operands(a, values, fmt)
     bz, nnz = fmt.bz, fmt.nnz
-    bm = core.resolve_or_pick(m, bm, 128, "bm")
-    bn = core.resolve_or_pick(n, bn, 256, "bn")
-    kb = core.resolve_or_pick(nb, kb, 16, "kb")
+    tuned = {}
+    if bm is None and bn is None and kb is None:
+        tuned = core.lookup_tiles(
+            core.KIND_MATMUL_TC, core.matmul_sig(m, k, n, bz, nnz, a.dtype)
+        ) or {}
+    bm = core.resolve_or_pick(m, bm, 128, "bm", tuned=tuned.get("bm"))
+    bn = core.resolve_or_pick(n, bn, 256, "bn", tuned=tuned.get("bn"))
+    kb = core.resolve_or_pick(nb, kb, 16, "kb", tuned=tuned.get("kb"))
     v2 = values.reshape(nb * nnz, n)
     idx = indices.astype(jnp.int32)
     acc_dtype = core.acc_dtype_for(a.dtype)
@@ -199,9 +204,14 @@ def vdbb_matmul_bw(
     :func:`vdbb_matmul_tc`."""
     m, k, nb, n = _check_compressed_operands(a, values, fmt)
     bz, nnz = fmt.bz, fmt.nnz
-    bm = core.resolve_or_pick(m, bm, 128, "bm")
-    bn = core.resolve_or_pick(n, bn, 256, "bn")
-    kb = core.resolve_or_pick(nb, kb, 8, "kb")
+    tuned = {}
+    if bm is None and bn is None and kb is None:
+        tuned = core.lookup_tiles(
+            core.KIND_MATMUL_BW, core.matmul_sig(m, k, n, bz, nnz, a.dtype)
+        ) or {}
+    bm = core.resolve_or_pick(m, bm, 128, "bm", tuned=tuned.get("bm"))
+    bn = core.resolve_or_pick(n, bn, 256, "bn", tuned=tuned.get("bn"))
+    kb = core.resolve_or_pick(nb, kb, 8, "kb", tuned=tuned.get("kb"))
     v2 = values.reshape(nb * nnz, n)
     idx2 = indices.astype(jnp.int32).reshape(nb * nnz, n)
     acc_dtype = core.acc_dtype_for(a.dtype)

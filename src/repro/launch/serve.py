@@ -4,16 +4,29 @@ weight-bandwidth-bound.
 
   PYTHONPATH=src python -m repro.launch.serve --arch codeqwen1.5-7b --smoke \
       --batch 4 --prompt-len 32 --gen 16
+
+CNN archs serve through a **frozen plan** (DESIGN.md §10): INT8
+quantization is calibrated, every layer's tuned tile config + staged
+weight buffers are resolved once by ``SparseCNN.plan()``, and the timed
+loop runs the single-dispatch ``plan.serve`` hot path. ``--no-plan``
+serves the unplanned per-call path for comparison; ``--tune search``
+runs the tile autotuner at plan-build time (persisted in the autotune
+cache, so repeat launches are search-free).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch sparse-cnn-tiny --smoke \
+      --batch 4 --steps 16 --tune search
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config, make_batch, smoke_config
+from repro.configs import CNN_ARCHS, get_cnn_config, get_config, make_batch, \
+    smoke_cnn_config, smoke_config
 from repro.models.model import LM
 from repro.train.step import make_prefill, make_serve_step
 
@@ -59,6 +72,42 @@ def generate(model: LM, params, prompt_batch, *, gen_len: int, max_len: int):
     return toks, (gen_len - 1) / max(dt, 1e-9)
 
 
+def serve_cnn(args):
+    """INT8 CNN serving through a frozen plan (DESIGN.md §10)."""
+    from repro.models.cnn import SparseCNN
+
+    cfgf = smoke_cnn_config if args.smoke else get_cnn_config
+    sparsity = None if args.dense else args.sparsity
+    cfg = dataclasses.replace(
+        cfgf(args.arch, sparsity=sparsity), kernel_mode="pallas"
+    )
+    model = SparseCNN(cfg)
+    params = model.compress(model.init(jax.random.PRNGKey(0)))
+    xb = jax.random.normal(
+        jax.random.PRNGKey(1),
+        (args.batch, cfg.image_size, cfg.image_size, cfg.in_channels),
+    )
+    _, stats = model.apply(params, xb, collect_act_stats=True)
+    qparams = model.quantize(params, stats)
+    print(f"[serve] {cfg.name}: INT8-calibrated, nnz={cfg.fmt.nnz}/{cfg.fmt.bz}")
+    if args.plan:
+        plan = model.plan(qparams, batch=args.batch, tune=args.tune)
+        tiles = plan.tiles
+        print(f"[serve] frozen plan: {len(plan.layers)} stages, "
+              f"tuned tiles for {len(tiles)} layers ({args.tune})")
+        step = plan.serve
+    else:
+        print("[serve] unplanned per-call path (--no-plan)")
+        step = lambda xb: model.apply(qparams, xb)  # noqa: E731
+    from repro.xla_utils import median_time_us  # the shared bench/tuner harness
+
+    logits = step(xb)
+    us = median_time_us(step, xb, warmup=1, reps=args.steps)
+    print(f"served batches of {args.batch} ({logits.shape} logits) at "
+          f"{1e6 / max(us, 1e-9):.2f} steps/s (median of {args.steps})")
+    return logits
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -68,7 +117,17 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=16,
+                    help="timed forward passes (CNN serving)")
+    ap.add_argument("--plan", action=argparse.BooleanOptionalAction, default=True,
+                    help="CNN: serve through a frozen plan (--no-plan = per-call path)")
+    ap.add_argument("--tune", choices=("off", "cache", "search"), default="cache",
+                    help="CNN plan tile resolution: autotune cache hits only "
+                         "(default), full search, or pick_tile defaults")
     args = ap.parse_args(argv)
+
+    if args.arch in CNN_ARCHS:
+        return serve_cnn(args)
 
     sparsity = None if args.dense else args.sparsity
     cfg = (smoke_config if args.smoke else get_config)(args.arch, sparsity=sparsity)

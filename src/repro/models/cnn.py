@@ -113,6 +113,7 @@ class SparseCNN:
         params: dict,
         x: jax.Array,
         *,
+        plan=None,
         collect_act_stats: bool = False,
         act_threshold: float = 0.0,
         intermediates: Optional[list] = None,
@@ -132,7 +133,21 @@ class SparseCNN:
         standalone fp32 dequant/ReLU/requant passes between compressed
         layers. ``intermediates`` (optional list, eager-only) collects
         each inter-layer activation so callers can assert dtypes.
+
+        ``plan`` (a :class:`repro.models.plan.ModelPlan` from
+        :meth:`plan`, DESIGN.md §10) serves through the frozen staged
+        chain after checking the plan still matches ``params``
+        (:class:`~repro.models.plan.StalePlanError` otherwise); the
+        check-free hot path is ``plan.serve(x)`` directly.
         """
+        if plan is not None:
+            if collect_act_stats or intermediates is not None:
+                raise ValueError(
+                    "plan serving is the frozen hot path; run without "
+                    "plan= to collect stats or intermediates"
+                )
+            plan.check(params)
+            return plan.serve(x)
         layers = self.layers()
         if not collect_act_stats and self._int8_chain_ready(layers, params):
             return self._apply_int8_resident(layers, params, x, intermediates)
@@ -226,6 +241,58 @@ class SparseCNN:
                 intermediates.append(x)
         x = x.mean(axis=(1, 2))  # global average pool (fp32 flush above)
         return head.quant_serve(params[f"l{n}"], x)
+
+    # ------------------------------------------- frozen serving plans (§10)
+    def plan(self, params: dict, *, batch: int, tune: str = "cache",
+             cache=None, top_k: int = 4, reps: int = 3):
+        """Freeze a once-per-model serving plan (DESIGN.md §10).
+
+        Resolves every layer's tuned tile config (autotune registry →
+        persistent cache → search when ``tune='search'``; ``'cache'``
+        never searches, ``'off'`` keeps pick_tile defaults), stages each
+        layer's serving closure with its weight buffers frozen in —
+        replicating exactly the path :meth:`apply` takes for these params,
+        including the §9 int8-resident chain when calibrated quantized
+        params are detected — and jit-compiles the whole chain once.
+        Steady-state serving (``plan.serve(x)``) is then a single dispatch
+        with zero per-call tile resolution, weight re-layout, or
+        retracing. The plan is immutable and pinned to ``params`` by
+        content fingerprint; serving through :meth:`apply`'s ``plan=``
+        kwarg re-checks that pin.
+
+        ``batch`` fixes the input batch size the plan is staged (and
+        tuned) for — other batch shapes still run, but retrace and fall
+        back to registry/default tiles.
+        """
+        from repro.models.plan import LayerPlan, ModelPlan, params_fingerprint
+
+        if tune != "off":
+            from repro.kernels.autotune import TuneCache
+
+            if not isinstance(cache, TuneCache):
+                cache = TuneCache(cache)  # parse the on-disk cache once, not per layer
+        layers = self.layers()
+        convs, head = layers[:-1], layers[-1]
+        fused = self._int8_chain_ready(layers, params)
+        c = self.cfg
+        h = w = c.image_size
+        n = len(convs)
+        kw = dict(tune=tune, cache=cache, top_k=top_k, reps=reps)
+        stages = []
+        for i, m in enumerate(convs):
+            out_scale = None
+            if fused and i + 1 < n:
+                out_scale = params[f"l{i + 1}"]["aq"]
+            run, tiles = m.make_plan(
+                params[f"l{i}"], batch=batch, h=h, w=w, relu=True,
+                out_scale=out_scale, fused=fused, **kw,
+            )
+            stages.append(LayerPlan(f"l{i}", "conv", tuple(sorted(tiles.items())), run))
+            h, w = m.out_hw(h, w)
+        stages.append(LayerPlan("gap", "pool", (), lambda x: x.mean(axis=(1, 2))))
+        run, tiles = head.make_plan(params[f"l{n}"], batch=batch, fused=fused, **kw)
+        stages.append(LayerPlan(f"l{n}", "linear", tuple(sorted(tiles.items())), run))
+        return ModelPlan(c.name, params_fingerprint(params), tuple(stages))
 
     # ------------------------------------------- the paper's technique
     def constrain(self, params: dict, step=None, schedule: Optional[PruneSchedule] = None) -> dict:

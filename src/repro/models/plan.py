@@ -1,0 +1,105 @@
+"""Frozen serving plans (DESIGN.md §10).
+
+A :class:`ModelPlan` is the once-per-model resolution of everything the
+serving path would otherwise redo on every call: tuned tile configs
+(``repro.kernels.autotune``), epilogue wiring, and the compressed/
+quantized weight buffers themselves. Each layer's serving step is staged
+into a closure with its parameters *frozen in*, and the whole chain is
+jit-compiled once — weights become trace-time constants, so XLA folds
+the per-call weight relayout (reshape / index expand / dtype cast) at
+compile time and steady-state serving is a single dispatch with zero
+per-call tile resolution, re-layout, or retracing.
+
+Plans are immutable (frozen dataclasses) and *pinned to the exact
+parameters they were built from*: :func:`params_fingerprint` hashes every
+leaf (shapes, dtypes, bytes) plus the tree structure, and
+``SparseCNN.apply(params, x, plan=plan)`` raises :class:`StalePlanError`
+when the fingerprint no longer matches — e.g. after a re-``quantize()``
+with fresh calibration. The hot path (``plan.serve(x)`` / ``plan(x)``)
+skips the check; the checked ``apply(..., plan=)`` form is for callers
+that still carry params and want the safety net.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Tuple
+
+import jax
+import numpy as np
+
+
+class StalePlanError(RuntimeError):
+    """A frozen plan was used with params it was not built from."""
+
+
+def params_fingerprint(params) -> str:
+    """Content hash of a param tree: tree structure (incl. static aux data
+    like ``DBBFormat``), every leaf's shape/dtype, and its bytes. Computed
+    once at plan build; any later re-quantize / re-compress / re-calibrate
+    changes it."""
+    h = hashlib.sha1()
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    h.update(repr(treedef).encode())
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        h.update(str(arr.shape).encode())
+        h.update(str(arr.dtype).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One staged serving stage: a name, the resolved tile config (sorted
+    (key, value) pairs; empty for reference/XLA paths and the pooling
+    stage), and the ``x -> y`` closure with weight buffers frozen in."""
+
+    name: str
+    kind: str  # 'conv' | 'linear' | 'pool'
+    tiles: Tuple[Tuple[str, int], ...]
+    run: Callable[[Any], Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelPlan:
+    """Immutable per-model serving plan — build with ``SparseCNN.plan()``.
+
+    ``serve(x)`` (also ``plan(x)``) runs the whole staged chain as one
+    jit-compiled program. ``check(params)`` raises :class:`StalePlanError`
+    on a fingerprint mismatch.
+    """
+
+    model: str
+    fingerprint: str
+    layers: Tuple[LayerPlan, ...]
+
+    def __post_init__(self):
+        stages = tuple(l.run for l in self.layers)
+
+        def chain(x):
+            for run in stages:
+                x = run(x)
+            return x
+
+        object.__setattr__(self, "_serve", jax.jit(chain))
+
+    def serve(self, x):
+        """Steady-state serving: one dispatch, no checks, no params."""
+        return self._serve(x)
+
+    def __call__(self, x):
+        return self.serve(x)
+
+    def check(self, params) -> None:
+        if params_fingerprint(params) != self.fingerprint:
+            raise StalePlanError(
+                f"plan for {self.model!r} was built from different params "
+                "(weights were re-quantized/re-compressed/re-calibrated "
+                "after the plan was frozen) — rebuild with model.plan()"
+            )
+
+    @property
+    def tiles(self) -> dict:
+        """Per-layer resolved tile configs (introspection/bench)."""
+        return {l.name: dict(l.tiles) for l in self.layers if l.tiles}

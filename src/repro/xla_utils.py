@@ -1,5 +1,30 @@
-"""Small helpers over jax compiled-artifact introspection APIs."""
+"""Small helpers over jax compiled-artifact introspection APIs, plus the
+shared wall-time measurement harness (``benchmarks/timing.py`` re-exports
+it and ``repro.kernels.autotune`` times candidates with it, so benchmark
+and autotuner numbers come from one code path)."""
 from __future__ import annotations
+
+import statistics
+import time
+
+
+def median_time_us(fn, *args, warmup: int = 1, reps: int = 5) -> float:
+    """Median wall time of ``fn(*args)`` in microseconds.
+
+    ``warmup`` un-timed calls absorb compilation/tracing, then ``reps``
+    timed calls each wrapped in ``jax.block_until_ready`` (imported lazily
+    so this module stays importable without jax for plain-python callers).
+    """
+    import jax
+
+    for _ in range(max(0, warmup)):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(samples)
 
 
 def cost_analysis_dict(compiled) -> dict:

@@ -217,11 +217,20 @@ class TestPickTile:
             rtol=1e-4, atol=1e-4,
         )
 
-    def test_explicit_bad_tile_still_raises(self):
-        a, _, _, _, qw = _gemm_case("matrix")
+    def test_explicit_bad_tile_pads_at_ops_strict_in_kernel(self):
+        """§10 pad-to-tile: a non-dividing explicit tile no longer raises
+        at the ops layer — the ragged M edge is zero-padded and sliced
+        back off, bit-identically (int8 path: exact int32 accumulation).
+        The kernel-level wrappers keep the strict contract."""
+        a, aq, _, _, qw = _gemm_case("matrix")
+        got = ops.vdbb_matmul(aq, qw.as_dbb(), bm=5, interpret=True)
+        want = ops.vdbb_matmul(aq, qw.as_dbb(), interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+        from repro.kernels.vdbb_matmul import vdbb_matmul_tc
+
         with pytest.raises(ValueError, match="does not tile"):
-            ops.vdbb_matmul(quant.quantize(a, 0.1), qw.as_dbb(), bm=5,
-                            interpret=True)
+            vdbb_matmul_tc(aq, qw.values, qw.indices[:, :, 0], qw.fmt, bm=5)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,182 @@
+"""Continuous-batching serving tier under load (DESIGN.md §11).
+
+Drives the §11 queue → bucketer → frozen-plan pipeline with a load
+generator and writes ``BENCH_serve.json`` (a CI artifact gated by
+``benchmarks/check_regression.py``). Four claims, all measured:
+
+1. **Bit-exactness**: bucketed/padded serving of every ragged batch size
+   (including one larger than the biggest bucket, which chunks) equals
+   per-request ``plan.serve`` exactly.
+2. **Wall time is the contract** (first slice of the ROADMAP item): the
+   frozen bucket plan is not slower than the *jitted-once* unplanned
+   ``model.apply`` beyond the committed noise margin — a fair baseline,
+   unlike comparing against an unjitted per-call lambda.
+3. **Zero retraces after warmup**: sustained variable-batch Poisson and
+   burst traffic dispatches only pre-compiled bucket plans; the plans'
+   own trace counters must not move during the load run.
+4. **Latency under load**: p50/p99 request latency (arrival → result
+   ready) and sustained throughput per arrival pattern, with a
+   self-calibrating p99 bound — ``margin × (max_wait + (depth+2) ×
+   measured_bucket_time)`` — so the gate tracks the host's speed
+   instead of hardcoding microseconds (what it catches is the failure
+   mode that matters: a retrace or batching regression inflating tail
+   latency by orders of magnitude).
+
+Offered load is auto-picked at ~25% of measured capacity (conservative:
+on the CPU smoke model, thread/GIL overhead per dispatch is comparable
+to the 3–4ms compute itself, so higher offered fractions saturate the
+interpreter, not the datapath).
+"""
+import json
+import pathlib
+import sys
+import time
+
+# Standalone-runnable (`python -m benchmarks.bench_serve --smoke`, the CI
+# one-liner): put src/ on the path like benchmarks/run.py does.
+_SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import core
+from repro.kernels.autotune import interleaved_medians
+from repro.launch.server import CNNServer, auto_rate, burst_arrivals, \
+    poisson_arrivals
+from repro.xla_utils import median_time_us
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+# Margins shared with benchmarks/check_regression.py via the committed
+# baselines file — bench and CI gate can never silently disagree.
+_BASELINES = json.loads(
+    (pathlib.Path(__file__).resolve().parent / "bench_baselines.json").read_text()
+)
+PLAN_MARGIN = _BASELINES["serve_plan_margin"]   # plan vs jitted-unplanned
+P99_MARGIN = _BASELINES["serve_p99_margin"]     # p99 vs self-calibrated bound
+
+
+def _drive(server, arrivals, xpool, sizes):
+    """Submit per the arrival schedule (real sleeps), resolve all futures.
+
+    The pool is sliced as numpy: a client hands the server host data, and
+    on a single device a jax slice per submit would enqueue onto the same
+    stream the serving batches run on and contend with them.
+    """
+    xpool = np.asarray(xpool)
+    futures = []
+    t0 = time.monotonic()
+    pool = xpool.shape[0]
+    for i, t_arr in enumerate(arrivals):
+        lag = t_arr - (time.monotonic() - t0)
+        if lag > 0:
+            time.sleep(lag)
+        j = i % (pool - 1)  # keep room for 2-sample requests at the edge
+        futures.append(server.submit(xpool[j : j + sizes[i]]))
+    return [f.result(timeout=300) for f in futures]
+
+
+def run(report, smoke: bool = True):
+    import dataclasses
+
+    from repro.configs import smoke_cnn_config
+    from repro.models.cnn import SparseCNN
+
+    core.clear_tuned()
+    cfg = dataclasses.replace(
+        smoke_cnn_config("sparse-cnn-tiny", sparsity=0.625), kernel_mode="pallas"
+    )
+    model = SparseCNN(cfg)
+    params = model.compress(model.init(jax.random.PRNGKey(0)))
+    sample_shape = (cfg.image_size, cfg.image_size, cfg.in_channels)
+    xpool = jax.random.normal(jax.random.PRNGKey(1), (16,) + sample_shape)
+    _, stats = model.apply(params, xpool[:4], collect_act_stats=True)
+    qparams = model.quantize(params, stats)
+
+    max_batch = 8
+    plan_set = model.plan_set(qparams, max_batch=max_batch, tune="off")
+    plan_set.warmup(sample_shape)
+    results = {
+        "backend": jax.default_backend(),
+        "buckets": list(plan_set.buckets),
+        "patterns": {},
+    }
+
+    # --- 1. bucketed/padded serving == per-request plan.serve, exactly --
+    for n in (1, 2, 3, 5, 8, 11):  # 11 > max bucket: exercises chunking
+        got = plan_set.serve(xpool[:n])
+        per = jnp.concatenate(
+            [plan_set.plans[1].serve(xpool[i : i + 1]) for i in range(n)]
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(per))
+    results["bit_identical"] = True
+    report("serve/bit_exact", 0.0,
+           "ragged n in {1,2,3,5,8,11} pad/slice == per-request plan.serve")
+
+    # --- 2. frozen bucket plan vs *jitted-once* unplanned apply ---------
+    xb = xpool[:max_batch]
+    unplanned = jax.jit(lambda x: model.apply(qparams, x))
+    jax.block_until_ready(unplanned(xb))  # compile outside the timing
+    plan_us, unplanned_us = interleaved_medians(
+        lambda: plan_set.plans[max_batch].serve(xb), lambda: unplanned(xb),
+        warmup=2, reps=9,
+    )
+    assert plan_us <= unplanned_us * PLAN_MARGIN, (plan_us, unplanned_us)
+    results["plan_us"] = round(plan_us, 1)
+    results["unplanned_jit_us"] = round(unplanned_us, 1)
+    report("serve/plan_vs_jitted_unplanned", plan_us,
+           f"jitted-once unplanned {unplanned_us:.0f}us "
+           f"({unplanned_us / max(plan_us, 1e-9):.2f}x, interleaved; "
+           f"margin {PLAN_MARGIN}x is the wall-time contract)")
+
+    # --- 3+4. load patterns through the server --------------------------
+    rate, unit_us = auto_rate(plan_set, sample_shape, utilization=0.25)
+    max_wait_ms = max(2.0, unit_us / 1e3)
+    results["unit_us"] = round(unit_us, 1)
+    results["max_wait_ms"] = round(max_wait_ms, 2)
+    n_req = 48 if smoke else 192
+    burst = 2 * max_batch
+    patterns = {
+        "poisson": (poisson_arrivals(rate, n_req, seed=7), 1),
+        "burst": (burst_arrivals(n_req, burst=burst, gap_s=4 * unit_us / 1e6),
+                  -(-burst // max_batch)),  # queue depth in buckets
+    }
+    rng = np.random.default_rng(11)
+    for name, (arrivals, depth) in patterns.items():
+        # mostly single-sample requests, a few 2-sample ones: the
+        # aggregator must mix request sizes without splitting any
+        sizes = np.where(rng.random(n_req) < 0.15, 2, 1)
+        server = CNNServer(plan_set, max_wait_ms=max_wait_ms)
+        with server:
+            server.warmup(sample_shape)
+            _drive(server, arrivals, xpool, sizes)
+        retraces = server.retraces_after_warmup
+        assert retraces == 0, f"{name}: {retraces} retraces under load"
+        s = server.stats.summary()
+        assert s["completed"] == s["offered"] == int(sizes.sum()), s
+        bound_us = P99_MARGIN * (max_wait_ms * 1e3 + (depth + 2) * unit_us)
+        assert s["p99_us"] <= bound_us, (name, s["p99_us"], bound_us)
+        s.update(rate_rps=round(float(rate), 2),
+                 retraces_after_warmup=retraces,
+                 p99_bound_us=round(bound_us, 1))
+        results["patterns"][name] = s
+        report(f"serve/{name}_p99", s["p99_us"],
+               f"p50 {s['p50_us']:.0f}us, {s['throughput_rps']:.1f} req/s "
+               f"sustained, {s['batches']} batches {s['bucket_counts']}, "
+               f"0 retraces after warmup")
+
+    OUT_PATH.write_text(json.dumps(results, indent=2))
+    report("serve/json", 0.0, f"wrote {OUT_PATH.name}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale load (48 requests; default 192)")
+    args = ap.parse_args()
+    run(lambda name, us, derived="": print(f"{name},{us:.1f},{derived}"),
+        smoke=args.smoke)

@@ -14,8 +14,19 @@ numbers must stay within a loose sanity margin, and plan serving must
 have been bit-identical. The bench asserts the same things first; this
 gate catches a stale or hand-edited artifact.
 
+``BENCH_serve.json`` gates the §11 serving tier on **measured wall
+time** (the first slice of the ROADMAP "wall time is the contract"
+item): the frozen bucket plan must not lose to the jitted-once
+unplanned path beyond ``serve_plan_margin``, every load pattern must
+complete all offered requests with **zero retraces after warmup**, and
+p99 latency must stay under its self-calibrated bound
+(``serve_p99_margin × (max_wait + (queue depth + 2) × measured bucket
+time)`` — host-speed-relative, so the gate catches order-of-magnitude
+tail-latency regressions without hardcoding microseconds). Bucketed
+serving must also have been bit-identical to per-request serving.
+
 Exit code 1 on any regression — run after ``python -m benchmarks.run
---smoke`` (which rewrites both artifacts).
+--smoke`` (which rewrites all three artifacts).
 """
 from __future__ import annotations
 
@@ -82,8 +93,41 @@ def check_autotune() -> list:
     return errors
 
 
+def check_serve() -> list:
+    errors = []
+    path = ROOT / "BENCH_serve.json"
+    if not path.exists():
+        return [f"{path.name} missing (run `python -m benchmarks.run --smoke`)"]
+    data = json.loads(path.read_text())
+    if not data.get("bit_identical", False):
+        errors.append("serve: bucketed/padded serving not bit-identical to "
+                      "per-request plan.serve")
+    plan_us, unplanned_us = data.get("plan_us"), data.get("unplanned_jit_us")
+    if plan_us is not None and unplanned_us is not None \
+            and plan_us > unplanned_us * _BASE["serve_plan_margin"]:
+        errors.append(  # the measured-wall-time contract (ROADMAP)
+            f"serve: bucket plan {plan_us}us > jitted-once unplanned "
+            f"{unplanned_us}us (margin {_BASE['serve_plan_margin']}x)"
+        )
+    for name, p in data.get("patterns", {}).items():
+        if p.get("completed") != p.get("offered"):
+            errors.append(f"serve/{name}: completed {p.get('completed')} != "
+                          f"offered {p.get('offered')}")
+        if p.get("retraces_after_warmup", 1) != 0:
+            errors.append(f"serve/{name}: "
+                          f"{p.get('retraces_after_warmup')} retraces under "
+                          "load (bucketed plans must serve retrace-free)")
+        p99, bound = p.get("p99_us"), p.get("p99_bound_us")
+        if p99 is not None and bound is not None and p99 > bound:
+            errors.append(f"serve/{name}: p99 {p99}us > self-calibrated "
+                          f"bound {bound}us")
+    if not data.get("patterns"):
+        errors.append("serve: no load patterns recorded")
+    return errors
+
+
 def main() -> int:
-    errors = check_fused() + check_autotune()
+    errors = check_fused() + check_autotune() + check_serve()
     for e in errors:
         print(f"REGRESSION: {e}", file=sys.stderr)
     if not errors:

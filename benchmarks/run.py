@@ -37,6 +37,7 @@ BENCHES = [
     ("quant (INT8 datapath, DESIGN §8)", "benchmarks.bench_quant", True),
     ("fused (epilogue fusion, DESIGN §9)", "benchmarks.bench_fused", True),
     ("autotune (tile search + frozen plans, DESIGN §10)", "benchmarks.bench_autotune", True),
+    ("serve (continuous-batching tier, DESIGN §11)", "benchmarks.bench_serve", True),
     ("roofline (EXPERIMENTS §Roofline)", "benchmarks.roofline", True),
 ]
 

@@ -1,1 +1,3 @@
 from repro.launch.mesh import make_production_mesh, make_test_mesh, tp_degree  # noqa: F401
+from repro.launch.server import CNNServer, MicroBatcher, auto_rate, \
+    burst_arrivals, poisson_arrivals  # noqa: F401

@@ -9,12 +9,23 @@ CNN archs serve through a **frozen plan** (DESIGN.md §10): INT8
 quantization is calibrated, every layer's tuned tile config + staged
 weight buffers are resolved once by ``SparseCNN.plan()``, and the timed
 loop runs the single-dispatch ``plan.serve`` hot path. ``--no-plan``
-serves the unplanned per-call path for comparison; ``--tune search``
+serves the unplanned path — jitted once, so the comparison measures the
+plan's staging win, not python dispatch overhead; ``--tune search``
 runs the tile autotuner at plan-build time (persisted in the autotune
 cache, so repeat launches are search-free).
 
   PYTHONPATH=src python -m repro.launch.serve --arch sparse-cnn-tiny --smoke \
       --batch 4 --steps 16 --tune search
+
+``--server`` runs the **continuous-batching tier** (DESIGN.md §11)
+instead of a fixed-batch loop: a bucketed plan set (1/2/…/--max-batch),
+the request queue + micro-batcher of ``repro.launch.server``, and a
+Poisson load generator at ``--rate`` requests/s (default: auto-picked
+at ~50% of measured capacity). Reports p50/p99 latency, sustained
+throughput, aggregation shape, and the zero-retrace check:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch sparse-cnn-tiny --smoke \
+      --server --max-batch 8 --max-wait-ms 5 --requests 64
 """
 from __future__ import annotations
 
@@ -90,6 +101,8 @@ def serve_cnn(args):
     _, stats = model.apply(params, xb, collect_act_stats=True)
     qparams = model.quantize(params, stats)
     print(f"[serve] {cfg.name}: INT8-calibrated, nnz={cfg.fmt.nnz}/{cfg.fmt.bz}")
+    if args.server:
+        return serve_cnn_continuous(args, model, qparams, xb)
     if args.plan:
         plan = model.plan(qparams, batch=args.batch, tune=args.tune)
         tiles = plan.tiles
@@ -97,8 +110,12 @@ def serve_cnn(args):
               f"tuned tiles for {len(tiles)} layers ({args.tune})")
         step = plan.serve
     else:
-        print("[serve] unplanned per-call path (--no-plan)")
-        step = lambda xb: model.apply(qparams, xb)  # noqa: E731
+        # jitted once: the comparison vs --plan then measures what plans
+        # save (staging, weight folding, tile pinning), not retrace/
+        # python-dispatch overhead the unplanned path would otherwise pay
+        # on every timed call.
+        print("[serve] unplanned path, jitted once (--no-plan)")
+        step = jax.jit(lambda xb: model.apply(qparams, xb))
     from repro.xla_utils import median_time_us  # the shared bench/tuner harness
 
     logits = step(xb)
@@ -106,6 +123,45 @@ def serve_cnn(args):
     print(f"served batches of {args.batch} ({logits.shape} logits) at "
           f"{1e6 / max(us, 1e-9):.2f} steps/s (median of {args.steps})")
     return logits
+
+
+def serve_cnn_continuous(args, model, qparams, xpool):
+    """The §11 serving tier under a Poisson load (``--server``)."""
+    from repro.launch.server import CNNServer, auto_rate, poisson_arrivals
+
+    sample_shape = xpool.shape[1:]
+    plan_set = model.plan_set(qparams, max_batch=args.max_batch, tune=args.tune)
+    print(f"[serve] plan set: buckets {plan_set.buckets} ({args.tune}), "
+          f"max-wait {args.max_wait_ms}ms")
+    rate = args.rate
+    if rate is None:
+        rate, bucket_us = auto_rate(plan_set, sample_shape)
+        print(f"[serve] auto rate: {rate:.1f} rps "
+              f"(~50% of capacity; largest bucket {bucket_us:.0f}us)")
+    arrivals = poisson_arrivals(rate, args.requests, seed=0)
+    # clients hand the server host data: a jax slice per submit would
+    # enqueue onto the same device stream the serving batches run on
+    import numpy as np
+
+    pool = np.asarray(xpool)
+    srv = CNNServer(plan_set, max_wait_ms=args.max_wait_ms)
+    with srv:
+        srv.warmup(sample_shape)
+        futures = []
+        t0 = time.monotonic()
+        for i, t_arr in enumerate(arrivals):
+            lag = t_arr - (time.monotonic() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            futures.append(srv.submit(pool[i % pool.shape[0]][None]))
+        results = [f.result(timeout=120) for f in futures]
+    s = srv.stats.summary()
+    print(f"[serve] {s['completed']}/{s['offered']} requests in {s['batches']} "
+          f"batches {s['bucket_counts']} (padded_frac {s['padded_frac']})")
+    print(f"[serve] p50 {s['p50_us']:.0f}us  p99 {s['p99_us']:.0f}us  "
+          f"throughput {s['throughput_rps']:.1f} rps  "
+          f"retraces after warmup: {srv.retraces_after_warmup}")
+    return results
 
 
 def main(argv=None):
@@ -124,6 +180,19 @@ def main(argv=None):
     ap.add_argument("--tune", choices=("off", "cache", "search"), default="cache",
                     help="CNN plan tile resolution: autotune cache hits only "
                          "(default), full search, or pick_tile defaults")
+    ap.add_argument("--server", action="store_true",
+                    help="CNN: continuous-batching tier (DESIGN §11) under a "
+                         "Poisson load instead of a fixed-batch loop")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="server: aggregation cap = largest plan bucket")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="server: max queueing delay before a partial batch "
+                         "dispatches")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="server: load-generator request count")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="server: offered load in requests/s "
+                         "(default: ~50%% of measured capacity)")
     args = ap.parse_args(argv)
 
     if args.arch in CNN_ARCHS:

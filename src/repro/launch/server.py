@@ -1,0 +1,365 @@
+"""Continuous-batching CNN serving tier (DESIGN.md §11).
+
+The pipeline is **queue → bucketer → (sharded) frozen-plan dispatch**:
+
+- :class:`CNNServer` owns a thread-safe request queue. ``submit(x)``
+  (``x``: ``(n, H, W, C)``, any ``n ≥ 1``) returns a
+  ``concurrent.futures.Future`` that resolves to that request's logits.
+- A dispatcher thread aggregates requests with :class:`MicroBatcher`:
+  flush as soon as ``max_batch`` samples are pending, or when the oldest
+  pending request has waited ``max_wait_ms`` — the classic
+  latency/throughput knob pair of a continuous-batching server.
+- Each aggregated batch is served through a
+  :class:`~repro.models.plan.PlanSet`: pad up to the nearest batch-size
+  bucket, dispatch that bucket's pre-compiled frozen plan, slice the
+  padding off, and scatter the per-request slices back into the futures.
+  Because every bucket was compiled at warmup, sustained variable load
+  runs **zero retraces** — a contract the server *measures* (plans count
+  their traces) rather than assumes, and bit-identical to serving every
+  request alone (batch rows are independent end to end).
+- With a device mesh (``mesh=``, e.g. ``launch.mesh.make_production_mesh``
+  / ``make_test_mesh``), each padded bucket is placed with the batch-axis
+  ``NamedSharding`` from ``sharding.rules.cnn_serve_rules`` +
+  ``data_pspec`` before dispatch, so the plan's jit partitions the batch
+  data-parallel across the 'data' (and 'pod') axes; every bucket is a
+  multiple of the DP degree by construction (``make_buckets(dp=)``), so
+  the padded batch always shards evenly and each device runs the same
+  staged program on its shard.
+
+The load-generator helpers (:func:`poisson_arrivals`,
+:func:`burst_arrivals`) live here too so ``benchmarks/bench_serve.py``
+and ``repro.launch.serve --server`` drive identical traffic shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue as _queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------- load gen
+def poisson_arrivals(rate_rps: float, n: int, *, seed: int = 0) -> np.ndarray:
+    """``n`` arrival offsets (seconds, ascending from ~0) of a Poisson
+    process at ``rate_rps`` requests/s — the memoryless steady-traffic
+    model; inter-arrival gaps are iid exponential."""
+    if rate_rps <= 0:
+        raise ValueError(f"rate_rps must be > 0, got {rate_rps}")
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+
+
+def burst_arrivals(n: int, *, burst: int, gap_s: float,
+                   start: float = 0.0) -> np.ndarray:
+    """``n`` arrival offsets in back-to-back bursts of ``burst`` requests
+    (all at the same instant) separated by ``gap_s`` seconds — the
+    worst case for a batcher: idle, then a queue-depth spike."""
+    if burst < 1:
+        raise ValueError(f"burst must be >= 1, got {burst}")
+    return np.asarray([start + (i // burst) * gap_s for i in range(n)])
+
+
+# ------------------------------------------------------------ batching
+@dataclasses.dataclass
+class _Pending:
+    """One queued request: its samples, arrival stamp, result future."""
+
+    x: jax.Array
+    n: int
+    arrival: float
+    future: Future
+
+
+class MicroBatcher:
+    """Pure aggregation logic (no threads, injectable clock — unit-testable).
+
+    Accumulates pending requests until either ``max_batch`` samples are
+    waiting (flush immediately) or the oldest has waited ``max_wait_s``
+    (flush what's there). Requests are never split across batches: a
+    request that would overflow the current batch flushes the batch
+    first; a single request larger than ``max_batch`` becomes its own
+    batch (``PlanSet.serve`` chunks it at the largest bucket).
+    """
+
+    def __init__(self, max_batch: int, max_wait_s: float):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_wait_s < 0:
+            raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._pending: List[_Pending] = []
+        self._count = 0
+
+    def __len__(self) -> int:
+        return self._count
+
+    def add(self, p: _Pending) -> List[List[_Pending]]:
+        """Queue one request; return the batches (0, 1 or 2) it flushed."""
+        out = []
+        if self._pending and self._count + p.n > self.max_batch:
+            out.append(self.take())
+        self._pending.append(p)
+        self._count += p.n
+        if self._count >= self.max_batch:
+            out.append(self.take())
+        return out
+
+    def deadline(self) -> Optional[float]:
+        """Absolute time the oldest pending request must flush by."""
+        if not self._pending:
+            return None
+        return self._pending[0].arrival + self.max_wait_s
+
+    def due(self, now: float) -> bool:
+        dl = self.deadline()
+        return dl is not None and now >= dl
+
+    def take(self) -> List[_Pending]:
+        """Flush everything pending (the dispatcher's max-wait path)."""
+        batch, self._pending, self._count = self._pending, [], 0
+        return batch
+
+
+# --------------------------------------------------------------- stats
+@dataclasses.dataclass
+class ServerStats:
+    """Counters a serving run accumulates (read after ``stop()``)."""
+
+    submitted: int = 0
+    completed: int = 0
+    batches: int = 0
+    served_samples: int = 0
+    padded_samples: int = 0
+    bucket_counts: dict = dataclasses.field(default_factory=dict)
+    latencies_s: list = dataclasses.field(default_factory=list)
+    first_arrival: Optional[float] = None
+    last_done: Optional[float] = None
+    warmup_traces: int = 0
+
+    def summary(self) -> dict:
+        """p50/p99 latency (µs), sustained throughput (requests/s over
+        first-arrival → last-completion), aggregation shape."""
+        lat_us = np.asarray(self.latencies_s, dtype=np.float64) * 1e6
+        span = (
+            (self.last_done - self.first_arrival)
+            if self.completed and self.last_done is not None else 0.0
+        )
+        return {
+            "offered": self.submitted,
+            "completed": self.completed,
+            "batches": self.batches,
+            "p50_us": round(float(np.percentile(lat_us, 50)), 1) if len(lat_us) else None,
+            "p99_us": round(float(np.percentile(lat_us, 99)), 1) if len(lat_us) else None,
+            "mean_us": round(float(lat_us.mean()), 1) if len(lat_us) else None,
+            "throughput_rps": round(self.completed / span, 2) if span > 0 else None,
+            "bucket_counts": {str(k): v for k, v in sorted(self.bucket_counts.items())},
+            "padded_frac": round(self.padded_samples / self.served_samples, 4)
+            if self.served_samples else 0.0,
+        }
+
+
+# --------------------------------------------------------------- server
+_STOP = object()
+
+
+class CNNServer:
+    """Continuous-batching front end over a frozen :class:`PlanSet`.
+
+    >>> plan_set = model.plan_set(qparams, max_batch=8, tune="cache")
+    >>> with CNNServer(plan_set, max_wait_ms=5.0) as srv:
+    ...     srv.warmup((32, 32, 3))
+    ...     fut = srv.submit(x1)          # x1: (1, 32, 32, 3)
+    ...     logits = fut.result()
+    >>> srv.stats.summary()["p99_us"], srv.retraces_after_warmup  # -> ..., 0
+
+    ``mesh=`` turns on data-parallel dispatch: padded buckets are placed
+    with the ``cnn_serve_rules`` batch-axis ``NamedSharding`` before the
+    plan runs (``multi_pod=`` selects the ('pod','data') axes). Build
+    the plan set with ``dp=mesh data size`` so every bucket shards
+    evenly.
+
+    The dispatcher blocks each batch to completion before resolving its
+    futures, so a request's measured latency (arrival → result ready)
+    includes queueing, padding, dispatch, and device time — what a
+    client would see. One batch is in flight at a time; jax's own async
+    dispatch still overlaps host-side aggregation of the next batch with
+    device compute of the current one.
+    """
+
+    def __init__(self, plan_set, *, max_batch: Optional[int] = None,
+                 max_wait_ms: float = 5.0, mesh=None, multi_pod: bool = False):
+        self.plan_set = plan_set
+        self.max_batch = int(max_batch or plan_set.buckets[-1])
+        self.max_wait_s = float(max_wait_ms) / 1e3
+        self.stats = ServerStats()
+        self._put = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+
+            from repro.sharding.rules import cnn_serve_rules, data_pspec
+
+            spec = data_pspec(cnn_serve_rules(multi_pod=multi_pod))
+            sharding = NamedSharding(mesh, spec)
+            self._put = lambda xb: jax.device_put(xb, sharding)
+        self._batcher = MicroBatcher(self.max_batch, self.max_wait_s)
+        self._q: _queue.Queue = _queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self._closed = False
+
+    # ------------------------------------------------------- lifecycle
+    def start(self) -> "CNNServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._closed = False
+        self._thread = threading.Thread(
+            target=self._loop, name="cnn-serve-dispatch", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self, *, drain: bool = True) -> None:
+        """Stop the dispatcher; ``drain=True`` (default) serves whatever
+        is still queued first, so every submitted future resolves."""
+        if self._thread is None:
+            return
+        with self._lock:
+            self._closed = True  # reject new submits racing the sentinel
+        self._q.put((_STOP, drain))
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "CNNServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------- hot path
+    def warmup(self, sample_shape: Sequence[int], dtype=jnp.float32) -> int:
+        """Compile every bucket (through the mesh sharding, when set) and
+        snapshot the trace count — the baseline of the zero-retrace
+        contract (:attr:`retraces_after_warmup`)."""
+        self.plan_set.warmup(tuple(sample_shape), dtype, put=self._put)
+        self.stats.warmup_traces = self.plan_set.trace_count
+        return self.stats.warmup_traces
+
+    @property
+    def retraces_after_warmup(self) -> int:
+        return self.plan_set.trace_count - self.stats.warmup_traces
+
+    def submit(self, x) -> Future:
+        """Enqueue one request (``x``: ``(n, ...)`` with ``n ≥ 1``
+        samples, numpy preferred — jax inputs are copied to host at
+        dispatch); returns the future of its ``(n, num_classes)`` logits
+        as numpy, already computed when the future resolves."""
+        if x.ndim < 2 or x.shape[0] < 1:
+            raise ValueError(f"request must be (n, ...) with n >= 1: {x.shape}")
+        fut: Future = Future()
+        p = _Pending(x=x, n=int(x.shape[0]), arrival=time.monotonic(), future=fut)
+        with self._lock:
+            if self._thread is None or self._closed:
+                raise RuntimeError("server is not running (use `with CNNServer(...)`)")
+            self.stats.submitted += p.n
+            if self.stats.first_arrival is None:
+                self.stats.first_arrival = p.arrival
+        self._q.put(p)
+        return fut
+
+    def serve_batch(self, x):
+        """Synchronous bucketed serve (no queue): pad → bucket plan →
+        slice, through the mesh sharding when set. The dispatcher and
+        direct callers (tests/bench baselines) share this one path."""
+        return self.plan_set.serve(x, put=self._put, on_dispatch=self._record)
+
+    # ------------------------------------------------------- internals
+    def _record(self, bucket: int, n_real: int) -> None:
+        self.stats.batches += 1
+        self.stats.served_samples += bucket
+        self.stats.padded_samples += bucket - n_real
+        self.stats.bucket_counts[bucket] = self.stats.bucket_counts.get(bucket, 0) + 1
+
+    def _loop(self) -> None:
+        stop = None
+        while stop is None:
+            timeout = None
+            dl = self._batcher.deadline()
+            if dl is not None:
+                timeout = max(0.0, dl - time.monotonic())
+            try:
+                items = [self._q.get(timeout=timeout)]
+            except _queue.Empty:
+                items = []  # max-wait expired with nothing new queued
+            # Greedily drain whatever arrived while the last batch was in
+            # flight: a backlog coalesces into full buckets here instead
+            # of degenerating into max-wait-expired singles.
+            while True:
+                try:
+                    items.append(self._q.get_nowait())
+                except _queue.Empty:
+                    break
+            for item in items:
+                if isinstance(item, tuple) and item[0] is _STOP:
+                    # submit() rejects after _closed, so nothing trails
+                    # the sentinel — finish feeding what preceded it.
+                    stop = item
+                    continue
+                for batch in self._batcher.add(item):
+                    self._dispatch(batch)
+            if stop is None and self._batcher.due(time.monotonic()):
+                self._dispatch(self._batcher.take())
+        remainder = self._batcher.take()
+        if stop[1]:  # drain: serve what's left so every future resolves
+            if remainder:
+                self._dispatch(remainder)
+        else:
+            for p in remainder:
+                p.future.cancel()
+
+    def _dispatch(self, batch: List[_Pending]) -> None:
+        try:
+            # Host-side assembly (numpy): concatenating/padding/slicing k
+            # request arrays as jax ops would XLA-compile a fresh glue op
+            # per (k, sizes) signature mid-traffic — a latency spike the
+            # warmed bucket plans exist to avoid. As numpy it is a
+            # memcpy, and serve_batch's host fast path keeps it that way
+            # end to end (the only device work is the bucket dispatch).
+            xs = [np.asarray(p.x) for p in batch]
+            xb = xs[0] if len(xs) == 1 else np.concatenate(xs, axis=0)
+            y = self.serve_batch(xb)  # numpy in -> numpy out, completed
+        except Exception as e:  # noqa: BLE001 — fail the requests, not the loop
+            for p in batch:
+                p.future.set_exception(e)
+            return
+        done = time.monotonic()
+        off = 0
+        for p in batch:
+            p.future.set_result(y[off : off + p.n])
+            off += p.n
+            self.stats.latencies_s.append(done - p.arrival)
+            self.stats.completed += p.n
+        self.stats.last_done = done
+
+
+def auto_rate(plan_set, sample_shape: Sequence[int], *, utilization: float = 0.5,
+              dtype=jnp.float32, put=None, reps: int = 5) -> Tuple[float, float]:
+    """Pick an offered load from measured capacity: times the largest
+    bucket's plan (median of ``reps``) and returns ``(rate_rps,
+    bucket_us)`` where ``rate_rps = utilization × bucket/bucket_time`` —
+    so load runs are self-calibrating across hosts instead of hardcoding
+    a requests/s that is idle on one machine and overload on another."""
+    from repro.xla_utils import median_time_us
+
+    cap = plan_set.buckets[-1]
+    xb = jnp.zeros((cap,) + tuple(sample_shape), dtype)
+    if put is not None:
+        xb = put(xb)
+    us = median_time_us(plan_set.plans[cap].serve, xb, warmup=1, reps=reps)
+    return utilization * cap / (us / 1e6), us

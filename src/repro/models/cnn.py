@@ -292,7 +292,45 @@ class SparseCNN:
         stages.append(LayerPlan("gap", "pool", (), lambda x: x.mean(axis=(1, 2))))
         run, tiles = head.make_plan(params[f"l{n}"], batch=batch, fused=fused, **kw)
         stages.append(LayerPlan(f"l{n}", "linear", tuple(sorted(tiles.items())), run))
-        return ModelPlan(c.name, params_fingerprint(params), tuple(stages))
+        return ModelPlan(c.name, params_fingerprint(params), tuple(stages), batch)
+
+    def plan_set(self, params: dict, *, max_batch: Optional[int] = None,
+                 buckets: Optional[Sequence[int]] = None, dp: int = 1,
+                 tune: str = "cache", cache=None, top_k: int = 4,
+                 reps: int = 3):
+        """Freeze a bucketed serving plan set (DESIGN.md §11).
+
+        One :meth:`plan` per batch-size bucket, all sharing the same
+        tune cache and params fingerprint. ``buckets`` defaults to the
+        power-of-two ladder ``make_buckets(max_batch, dp=dp)``; ``dp``
+        (the data-parallel degree the set will be served at) forces
+        every bucket to shard evenly over a mesh's data axis. The
+        returned :class:`~repro.models.plan.PlanSet` serves any batch
+        size retrace-free after warmup: ragged batches pad up to the
+        nearest bucket and slice back, bit-identical to per-request
+        serving.
+        """
+        from repro.models.plan import PlanSet, make_buckets, params_fingerprint
+
+        if buckets is None:
+            if max_batch is None:
+                raise ValueError("plan_set needs max_batch or explicit buckets")
+            buckets = make_buckets(max_batch, dp=dp)
+        buckets = tuple(sorted({int(b) for b in buckets}))
+        bad = [b for b in buckets if b < 1 or b % dp]
+        if bad:
+            raise ValueError(f"buckets {bad} not positive multiples of dp={dp}")
+        if tune != "off":
+            from repro.kernels.autotune import TuneCache
+
+            if not isinstance(cache, TuneCache):
+                cache = TuneCache(cache)  # one on-disk parse for all buckets
+        plans = {
+            b: self.plan(params, batch=b, tune=tune, cache=cache, top_k=top_k,
+                         reps=reps)
+            for b in buckets
+        }
+        return PlanSet(self.cfg.name, params_fingerprint(params), buckets, plans)
 
     # ------------------------------------------- the paper's technique
     def constrain(self, params: dict, step=None, schedule: Optional[PruneSchedule] = None) -> dict:

@@ -18,14 +18,26 @@ when the fingerprint no longer matches — e.g. after a re-``quantize()``
 with fresh calibration. The hot path (``plan.serve(x)`` / ``plan(x)``)
 skips the check; the checked ``apply(..., plan=)`` form is for callers
 that still carry params and want the safety net.
+
+A :class:`PlanSet` (DESIGN.md §11) lifts one plan to a serving *bucket
+ladder*: each batch-size bucket maps to its own pre-compiled plan, and
+``serve(x)`` pads any ragged batch up to the nearest bucket, dispatches
+that bucket's frozen plan, and slices the padding back off — so variable
+load never retraces and padded serving stays bit-identical to
+per-request serving (batch rows are independent through conv/GEMM/GAP;
+zero rows contribute nothing to anyone else's output). Every plan counts
+its (re)traces, which is what lets the serving tier *prove* the
+zero-retrace-after-warmup contract rather than assume it.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Any, Callable, Tuple
+from types import MappingProxyType
+from typing import Any, Callable, Mapping, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -73,20 +85,32 @@ class ModelPlan:
     model: str
     fingerprint: str
     layers: Tuple[LayerPlan, ...]
+    batch: Optional[int] = None  # the batch the plan was staged/tuned for
 
     def __post_init__(self):
         stages = tuple(l.run for l in self.layers)
+        traces = {"count": 0}
 
         def chain(x):
+            traces["count"] += 1  # runs at trace time only, not per dispatch
             for run in stages:
                 x = run(x)
             return x
 
         object.__setattr__(self, "_serve", jax.jit(chain))
+        object.__setattr__(self, "_traces", traces)
 
     def serve(self, x):
         """Steady-state serving: one dispatch, no checks, no params."""
         return self._serve(x)
+
+    @property
+    def trace_count(self) -> int:
+        """How many times the staged chain has been (re)traced — one per
+        distinct (shape, dtype, sharding) this plan has served. The
+        serving tier snapshots this after warmup to enforce its
+        zero-retrace contract (DESIGN.md §11)."""
+        return self._traces["count"]
 
     def __call__(self, x):
         return self.serve(x)
@@ -103,3 +127,142 @@ class ModelPlan:
     def tiles(self) -> dict:
         """Per-layer resolved tile configs (introspection/bench)."""
         return {l.name: dict(l.tiles) for l in self.layers if l.tiles}
+
+
+# ------------------------------------------------------------------ §11
+def make_buckets(max_batch: int, *, dp: int = 1) -> Tuple[int, ...]:
+    """The serving bucket ladder: ``dp``-multiple powers of two up to the
+    first bucket ≥ ``max_batch`` (e.g. ``make_buckets(8) == (1, 2, 4, 8)``,
+    ``make_buckets(6, dp=2) == (2, 4, 8)``). Every bucket is divisible by
+    ``dp`` so a padded batch always shards evenly over the data axis of a
+    device mesh."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    if dp < 1:
+        raise ValueError(f"dp must be >= 1, got {dp}")
+    out = [dp]
+    while out[-1] < max_batch:
+        out.append(out[-1] * 2)
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSet:
+    """A bucket ladder of frozen plans for one model (DESIGN.md §11).
+
+    ``buckets`` is ascending and ``plans[b]`` is the :class:`ModelPlan`
+    staged for batch ``b``. ``serve(x)`` handles any leading batch size:
+    the batch is chunked at the largest bucket, each chunk is zero-padded
+    up to the smallest bucket that fits, the bucket's pre-compiled plan
+    runs, and the padding is sliced back off — bit-identical to serving
+    each request alone (batch rows are independent end to end), with
+    zero retraces once every bucket has been warmed.
+
+    Build with ``SparseCNN.plan_set()``. The set shares its parent
+    plans' immutability and params pin (one fingerprint for all
+    buckets).
+    """
+
+    model: str
+    fingerprint: str
+    buckets: Tuple[int, ...]
+    plans: Mapping[int, "ModelPlan"]
+
+    def __post_init__(self):
+        if not self.buckets:
+            raise ValueError("PlanSet needs at least one bucket")
+        if list(self.buckets) != sorted(set(self.buckets)):
+            raise ValueError(f"buckets must be ascending+unique: {self.buckets}")
+        if set(self.plans) != set(self.buckets):
+            raise ValueError(
+                f"plans keyed {sorted(self.plans)} != buckets {self.buckets}"
+            )
+        object.__setattr__(self, "plans", MappingProxyType(dict(self.plans)))
+
+    # ------------------------------------------------------------ serve
+    def bucket_for(self, n: int) -> Optional[int]:
+        """Smallest bucket ≥ n, or None when n exceeds the largest bucket
+        (``serve`` then chunks at the largest bucket)."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return None
+
+    def serve(self, x, *, put=None, on_dispatch=None):
+        """Bucketed serving of any batch size.
+
+        A numpy ``x`` takes the **host-assembly fast path**: chunk/pad/
+        slice run as numpy on the host and the result comes back as
+        numpy — only the pre-warmed bucket-shaped plan dispatch ever
+        touches the device, so no glue op (pad, slice, concat) can
+        trigger a first-occurrence XLA compile mid-traffic. This is the
+        path the serving tier dispatches on. A jax ``x`` stays on-device
+        end to end and returns jax.
+
+        ``put`` (optional) maps each padded chunk onto devices — the
+        serving tier injects ``device_put`` to a mesh's data-axis
+        ``NamedSharding`` here. ``on_dispatch(bucket, n_real)`` (optional)
+        observes each underlying plan dispatch (stats/bench hook).
+        """
+        n = x.shape[0]
+        if n < 1:
+            raise ValueError(f"empty batch: {x.shape}")
+        host = isinstance(x, np.ndarray)
+        xp = np if host else jnp
+        cap = self.buckets[-1]
+        outs = []
+        i = 0
+        while i < n:
+            take = min(cap, n - i)
+            b = self.bucket_for(take)
+            xb = x[i : i + take]
+            if take < b:
+                pad = [(0, b - take)] + [(0, 0)] * (x.ndim - 1)
+                xb = xp.pad(xb, pad)
+            if put is not None:
+                xb = put(xb)
+            if on_dispatch is not None:
+                on_dispatch(b, take)
+            y = self.plans[b].serve(xb)
+            if host:
+                y = np.asarray(y)  # block + gather once, slice on the host
+            outs.append(y if take == b else y[:take])
+            i += take
+        return outs[0] if len(outs) == 1 else xp.concatenate(outs, axis=0)
+
+    def __call__(self, x):
+        return self.serve(x)
+
+    def warmup(self, sample_shape: Tuple[int, ...], dtype=jnp.float32,
+               *, put=None) -> int:
+        """Trace+compile every bucket once (``sample_shape`` is one
+        sample, no batch dim — e.g. ``(H, W, C)``). Warms the same
+        host→device transfer + dispatch signature the host-assembly
+        ``serve`` path uses. Returns :attr:`trace_count` afterwards;
+        serving any batch size through the same ``put`` after this
+        retraces nothing."""
+        for b in self.buckets:
+            xb = np.zeros((b,) + tuple(sample_shape), dtype)
+            self.serve(xb, put=put)
+        return self.trace_count
+
+    # ------------------------------------------------------- introspection
+    @property
+    def trace_count(self) -> int:
+        """Total (re)traces across all buckets (zero-retrace contract)."""
+        return sum(p.trace_count for p in self.plans.values())
+
+    @property
+    def tiles(self) -> dict:
+        """Per-bucket per-layer resolved tile configs."""
+        return {b: self.plans[b].tiles for b in self.buckets}
+
+    def check(self, params) -> None:
+        """Raise :class:`StalePlanError` unless ``params`` still matches
+        the params every bucket's plan was frozen from."""
+        if params_fingerprint(params) != self.fingerprint:
+            raise StalePlanError(
+                f"plan set for {self.model!r} was built from different "
+                "params (weights were re-quantized/re-compressed/"
+                "re-calibrated) — rebuild with model.plan_set()"
+            )

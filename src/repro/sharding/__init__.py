@@ -1,1 +1,2 @@
-from repro.sharding.rules import attn_mode, data_pspec, make_rules  # noqa: F401
+from repro.sharding.rules import attn_mode, cnn_serve_rules, data_pspec, \
+    make_rules  # noqa: F401

@@ -81,6 +81,15 @@ def make_rules(
     return rules
 
 
+def cnn_serve_rules(*, multi_pod: bool = False) -> dict:
+    """Batch-only rules for the CNN serving tier (DESIGN.md §11): the
+    aggregated batch data-parallels over ('data',) — or ('pod','data')
+    across pods — while weights stay replicated per device, because
+    inside a frozen plan they are trace-time constants each device's
+    staged executable already carries."""
+    return {"batch": ("pod", "data") if multi_pod else ("data",)}
+
+
 def data_pspec(rules):
     from jax.sharding import PartitionSpec as P
 

@@ -6,6 +6,21 @@ artifacts themselves are gitignored): per-layer fused-epilogue savings
 fractions must not regress below the baseline (small tolerance for
 rounding) and must in any case stay above the §9 acceptance floor of 25%.
 
+``BENCH_fused.json`` is additionally gated on **measured wall time**
+(DESIGN.md §12 — wall time is the perf contract, not the modeled bytes):
+the fused conv layer must not lose to the kernel + standalone-XLA-epilogue
+program, and the int8-resident CNN chain must not lose to the
+per-layer-dequant path. Both pairs are measured interleaved min-of-k by
+``bench_fused.py``; the gate margin is ``fused_wall_margin`` widened by
+the measured host noise of the same sample batch
+(``× (1 + min(noise_frac, fused_noise_cap))``) — host-speed-relative, so
+a contended CI box widens its own tolerance instead of flaking, while a
+genuine fusion regression still trips it.
+
+Every artifact is first checked against a minimal schema (required keys
+present, numbers finite and positive) so a truncated or hand-edited file
+fails loudly instead of silently passing vacuous gates.
+
 ``BENCH_autotune.json`` is validated as a second-line gate: the
 confirmation-pass contract (``tuned_us ≤ default_us`` — enforced by the
 search's interleaved head-to-head, with non-replicating winners demoted
@@ -31,6 +46,7 @@ Exit code 1 on any regression — run after ``python -m benchmarks.run
 from __future__ import annotations
 
 import json
+import math
 import pathlib
 import sys
 
@@ -41,7 +57,91 @@ TOLERANCE = 0.02   # absolute saved_frac slack for rounding
 # wall-time margins shared with bench_autotune via the baselines file
 NOISE_MARGIN = _BASE["autotune_noise_margin"]
 SANITY_MARGIN = _BASE["autotune_sanity_margin"]
+WALL_MARGIN = _BASE["fused_wall_margin"]
+NOISE_CAP = _BASE["fused_noise_cap"]
 HARD_FLOOR = 0.25  # the §9 acceptance criterion, regardless of baseline
+
+
+# ---------------------------------------------------------------------------
+# Artifact schemas: {dotted.path: check} where check is 'num' (finite > 0),
+# 'frac' (finite ≥ 0), or a type. A path ending in '[]' descends into every
+# element of a non-empty list.
+# ---------------------------------------------------------------------------
+
+SCHEMAS = {
+    "BENCH_fused.json": {
+        "layers[].name": str,
+        "layers[].saved_frac": "frac",
+        "layers[].hbm_bytes_fused": "num",
+        "layers[].hbm_bytes_unfused": "num",
+        "wall_time_us.layer_fused": "num",
+        "wall_time_us.layer_unfused": "num",
+        "wall_time_us.cnn_int8_resident": "num",
+        "wall_time_us.cnn_per_layer_dequant": "num",
+        "noise_frac.layer": "frac",
+        "noise_frac.cnn": "frac",
+        "harness.reps": "num",
+        "harness.stat": str,
+    },
+    "BENCH_autotune.json": {
+        "odd_gemms[].tuned_us": "num",
+        "odd_gemms[].default_us": "num",
+        "smoke_cnn.plan_us": "num",
+        "smoke_cnn.default_us": "num",
+    },
+    "BENCH_serve.json": {
+        "plan_us": "num",
+        "unplanned_jit_us": "num",
+        "bit_identical": bool,
+    },
+}
+
+
+def _walk(data, parts):
+    """Yield every value at a dotted path, descending lists at '[]'."""
+    if not parts:
+        yield data
+        return
+    head, rest = parts[0], parts[1:]
+    if head.endswith("[]"):
+        items = data.get(head[:-2], []) if isinstance(data, dict) else []
+        if not isinstance(items, list) or not items:
+            yield None  # an empty/missing list fails the leaf check below
+            return
+        for item in items:
+            yield from _walk(item, rest)
+    else:
+        yield from _walk(data.get(head) if isinstance(data, dict) else None, rest)
+
+
+def schema_errors(name: str, data) -> list:
+    """Validate one artifact dict against its schema (see SCHEMAS)."""
+    errors = []
+    for path, check in SCHEMAS.get(name, {}).items():
+        for v in _walk(data, path.split(".")):
+            if check == "num":
+                ok = isinstance(v, (int, float)) and not isinstance(v, bool) \
+                    and math.isfinite(v) and v > 0
+                want = "finite positive number"
+            elif check == "frac":
+                ok = isinstance(v, (int, float)) and not isinstance(v, bool) \
+                    and math.isfinite(v) and v >= 0
+                want = "finite non-negative number"
+            else:
+                ok = isinstance(v, check)
+                want = check.__name__
+            if not ok:
+                errors.append(f"{name}: schema: {path} = {v!r} (want {want})")
+    return errors
+
+
+def _wall_margin(noise) -> float:
+    """Self-calibrating gate margin: the committed ``fused_wall_margin``
+    widened by the measured host noise of the same sample batch, capped so
+    a pathologically noisy artifact cannot gate itself vacuously."""
+    noise = noise if isinstance(noise, (int, float)) and math.isfinite(noise) \
+        else NOISE_CAP
+    return WALL_MARGIN * (1.0 + min(max(noise, 0.0), NOISE_CAP))
 
 
 def check_fused() -> list:
@@ -50,6 +150,9 @@ def check_fused() -> list:
     if not path.exists():
         return [f"{path.name} missing (run `python -m benchmarks.run --smoke`)"]
     fresh = json.loads(path.read_text())
+    errors += schema_errors(path.name, fresh)
+    if errors:
+        return errors  # gates below would read garbage
     base = _BASE.get("fused_saved_frac", {})
     for layer in fresh.get("layers", []):
         name, saved = layer["name"], layer["saved_frac"]
@@ -61,6 +164,21 @@ def check_fused() -> list:
                 f"fused/{name}: saved_frac regressed {ref:.3f} -> {saved:.3f} "
                 f"(tolerance {TOLERANCE}; committed baseline {BASELINES.name})"
             )
+    # measured-wall-time gates (§12): fused must not lose to unfused
+    wall, noise = fresh["wall_time_us"], fresh["noise_frac"]
+    pairs = (
+        ("layer_fused", "layer_unfused", "layer"),
+        ("cnn_int8_resident", "cnn_per_layer_dequant", "cnn"),
+    )
+    for fast, slow, nkey in pairs:
+        margin = _wall_margin(noise.get(nkey))
+        if wall[fast] > wall[slow] * margin:
+            errors.append(
+                f"fused/{fast}: {wall[fast]:.0f}us > {wall[slow]:.0f}us "
+                f"({slow}) x margin {margin:.2f} (= fused_wall_margin "
+                f"{WALL_MARGIN} widened by measured noise "
+                f"{noise.get(nkey)})"
+            )
     return errors
 
 
@@ -70,6 +188,9 @@ def check_autotune() -> list:
     if not path.exists():
         return []  # informational artifact; bench_autotune asserts on its own
     data = json.loads(path.read_text())
+    errors += schema_errors(path.name, data)
+    if errors:
+        return errors
     for g in data.get("odd_gemms", []):
         name = f"autotune/gemm_{g['m']}x{g['k']}x{g['n']}"
         if g["tuned_us"] > g["default_us"]:
@@ -99,6 +220,9 @@ def check_serve() -> list:
     if not path.exists():
         return [f"{path.name} missing (run `python -m benchmarks.run --smoke`)"]
     data = json.loads(path.read_text())
+    errors += schema_errors(path.name, data)
+    if errors:
+        return errors
     if not data.get("bit_identical", False):
         errors.append("serve: bucketed/padded serving not bit-identical to "
                       "per-request plan.serve")

@@ -5,11 +5,19 @@ Prints ``name,us_per_call,derived`` CSV. ``python -m benchmarks.run``.
 modules can't silently rot); the interpret-mode Pallas sweeps stay out.
 ``--json <path>`` additionally writes every reported row as JSON for
 trajectory tracking (CI uploads the smoke results as an artifact).
+
+Every sub-benchmark failure is caught, reported inline, and re-listed in
+a ``FAILED n/m`` summary at the end; the process exits 1 if *any* module
+failed (not just the last one), so CI cannot green-wash a mid-run
+assertion. ``REPRO_BENCH_EXTRA`` (colon-separated module names) appends
+extra bench modules — the hook the subprocess test uses to prove the
+exit-code contract with a deliberately failing module.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 import traceback
@@ -42,7 +50,7 @@ BENCHES = [
 ]
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter")
     ap.add_argument(
@@ -64,11 +72,16 @@ def main() -> None:
 
     import importlib
 
-    for label, mod, smoke_ok in BENCHES:
+    benches = list(BENCHES)
+    extra = os.environ.get("REPRO_BENCH_EXTRA", "")
+    benches += [(m, m, True) for m in extra.split(":") if m]
+    ran = 0
+    for label, mod, smoke_ok in benches:
         if args.only and args.only not in mod:
             continue
         if args.smoke and not smoke_ok:
             continue
+        ran += 1
         try:
             importlib.import_module(mod).run(record)
         except Exception as e:  # noqa: BLE001
@@ -78,8 +91,12 @@ def main() -> None:
     if args.json:
         pathlib.Path(args.json).write_text(json.dumps({"rows": rows}, indent=2))
     if failures:
-        sys.exit(1)
+        print(f"FAILED {len(failures)}/{ran} benchmarks:", file=sys.stderr)
+        for label, e in failures:
+            print(f"  {label}: {type(e).__name__}: {e}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

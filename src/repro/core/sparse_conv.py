@@ -194,14 +194,18 @@ class DBBConv2d:
         bit-identical to the unplanned chain); ``tiles`` is the resolved
         config (empty on reference/XLA paths).
         """
-        from repro.kernels.core import conv_geometry, pick_tile
+        from repro.kernels.core import conv_geometry, default_interpret, pick_tile
 
         wp = params["w"]
         pallas = self.kernel_mode == "pallas"
         quant = isinstance(wp, QuantDBBWeight)
         compressed = isinstance(wp, DBBWeight)
+        # fp stem fuses only on compiled backends — interpret-mode Pallas
+        # dense conv loses badly to XLA's native conv, and the chain in
+        # SparseCNN.apply makes the same call, keeping plan == apply
+        # bit-identical (DESIGN.md §12)
         stem_fused = fused and pallas and out_scale is not None and not (
-            quant or compressed)
+            quant or compressed) and not default_interpret()
         tiled = pallas and (quant or compressed or stem_fused)
         tiles: dict = {}
         if tiled and tune != "off":

@@ -34,8 +34,6 @@ import dataclasses
 import json
 import os
 import pathlib
-import statistics
-import time
 from typing import Optional
 
 import jax
@@ -51,15 +49,18 @@ from repro.core.vdbb import (
     dbb_gemm_costs,
 )
 from repro.kernels import core, ops
-from repro.xla_utils import median_time_us
+from repro.xla_utils import interleaved_time_us, median_time_us
 
 CACHE_VERSION = 1
 
 # Roofline constants for the analytic pruning model. Absolute numbers do
-# not matter (only the candidate ranking does); the machine balance comes
-# from the shared TPU-v5e constants in the energy model, plus a per-grid-
-# step overhead term that penalizes pathologically fine grids (which is
-# also what dominates interpret-mode timing on CPU).
+# not matter (only the candidate ranking does). The machine balance
+# defaults to the shared TPU-v5e constants in the energy model, plus a
+# per-grid-step overhead term that penalizes pathologically fine grids
+# (which is also what dominates interpret-mode timing on CPU) — but the
+# per-backend *measured* calibration (``repro.kernels.calibrate``,
+# DESIGN.md §12) overrides all three once fitted, so the pruning ranking
+# tracks the machine the search actually runs on.
 _PEAK_MACS = TPU_V5E["peak_bf16_flops"] / 2
 _HBM_BW = TPU_V5E["hbm_bw"]
 _STEP_OVERHEAD_S = 2e-6
@@ -96,10 +97,15 @@ class TuneCache:
     def __init__(self, path=None):
         self.path = pathlib.Path(path) if path is not None else default_cache_path()
         self.entries: dict = {}
+        # per-backend roofline calibration (repro.kernels.calibrate,
+        # DESIGN.md §12) rides in the same file under its own
+        # CALIBRATION_VERSION, invalidated independently of tile entries
+        self.calibration: dict = {}
         self.load()
 
     def load(self) -> None:
         self.entries = {}
+        self.calibration = {}
         try:
             data = json.loads(self.path.read_text())
         except (OSError, ValueError):
@@ -107,6 +113,8 @@ class TuneCache:
         if not isinstance(data, dict) or data.get("version") != CACHE_VERSION:
             return  # version mismatch: invalidate, re-search on demand
         self.entries = dict(data.get("entries", {}))
+        cal = data.get("calibration", {})
+        self.calibration = dict(cal) if isinstance(cal, dict) else {}
 
     def get(self, key: str) -> Optional[dict]:
         return self.entries.get(key)
@@ -124,7 +132,8 @@ class TuneCache:
                                    prefix=self.path.name + ".")
         with os.fdopen(fd, "w") as f:
             f.write(json.dumps(
-                {"version": CACHE_VERSION, "entries": self.entries},
+                {"version": CACHE_VERSION, "entries": self.entries,
+                 "calibration": self.calibration},
                 indent=2, sort_keys=True,
             ))
         os.replace(tmp, self.path)
@@ -221,13 +230,15 @@ def default_conv_tiles(ho: int, wo: int, f: int) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def modeled_matmul_cost(m: int, k: int, n: int, fmt: DBBFormat, tiles: dict,
-                        itemsize: float = 4.0) -> float:
-    """Modeled seconds for one OS matmul launch under a tile config.
+def matmul_cost_terms(m: int, k: int, n: int, fmt: DBBFormat, tiles: dict,
+                      itemsize: float = 4.0) -> tuple:
+    """``(executed_macs, hbm_bytes, grid_steps)`` of one OS matmul launch
+    under a tile config — the three roofline terms, shared by the modeled
+    cost below and the calibration fit (``repro.kernels.calibrate``).
 
     A tiles are re-read once per N tile, the compressed weight stream once
     per M tile (output-stationary dataflow); padded candidates are charged
-    their wasted compute; the grid term charges per-step overhead.
+    their wasted compute.
     """
     bm, bn, kb = tiles["bm"], tiles["bn"], tiles["kb"]
     mp = -(-m // bm) * bm
@@ -239,15 +250,14 @@ def modeled_matmul_cost(m: int, k: int, n: int, fmt: DBBFormat, tiles: dict,
     act = c["act_bytes"] * (n_pad // bn) * (mp / m)
     wt = c["weight_bytes"] * (mp // bm)
     out = m * n * 4
-    compute_s = c["executed_macs"] * ((mp * n_pad) / (m * n)) / _PEAK_MACS
-    mem_s = (act + wt + out) / _HBM_BW
-    return max(compute_s, mem_s) + grid * _STEP_OVERHEAD_S
+    macs = c["executed_macs"] * ((mp * n_pad) / (m * n))
+    return macs, act + wt + out, grid
 
 
-def modeled_conv_cost(batch: int, ho: int, wo: int, c_in: int, f: int,
-                      kh: int, kw: int, sh: int, sw: int, fmt: DBBFormat,
-                      tiles: dict, itemsize: float = 4.0) -> float:
-    """Modeled seconds for one fused-conv launch under a tile config."""
+def conv_cost_terms(batch: int, ho: int, wo: int, c_in: int, f: int,
+                    kh: int, kw: int, sh: int, sw: int, fmt: DBBFormat,
+                    tiles: dict, itemsize: float = 4.0) -> tuple:
+    """Conv twin of :func:`matmul_cost_terms`."""
     bf, bh, bw = tiles["bf"], tiles["tile_h"], tiles["tile_w"]
     th, tw = ho // bh, wo // bw
     bh_in = (bh - 1) * sh + kh
@@ -259,9 +269,40 @@ def modeled_conv_cost(batch: int, ho: int, wo: int, c_in: int, f: int,
     act = spatial * bh_in * bw_in * c_in * itemsize * (f // bf)
     wt = g["weight_bytes"] * spatial
     out = batch * ho * wo * f * 4
-    compute_s = g["executed_macs"] / _PEAK_MACS
-    mem_s = (act + wt + out) / _HBM_BW
-    return max(compute_s, mem_s) + grid * _STEP_OVERHEAD_S
+    return g["executed_macs"], act + wt + out, grid
+
+
+def _resolve_cal(cal):
+    """The calibration the modeled costs run under: an explicit
+    :class:`repro.kernels.calibrate.Calibration`, else this backend's
+    active/cached/default one (lazy import — no cycle)."""
+    if cal is not None:
+        return cal
+    from repro.kernels import calibrate
+
+    return calibrate.get_calibration()
+
+
+def modeled_matmul_cost(m: int, k: int, n: int, fmt: DBBFormat, tiles: dict,
+                        itemsize: float = 4.0, cal=None) -> float:
+    """Modeled seconds for one OS matmul launch under a tile config:
+    ``max(compute, memory) + grid · step_overhead`` with the per-backend
+    calibrated machine constants (DESIGN.md §12)."""
+    cal = _resolve_cal(cal)
+    macs, bytes_, grid = matmul_cost_terms(m, k, n, fmt, tiles, itemsize)
+    return (max(macs / cal.peak_macs, bytes_ / cal.hbm_bw)
+            + grid * cal.step_overhead_s)
+
+
+def modeled_conv_cost(batch: int, ho: int, wo: int, c_in: int, f: int,
+                      kh: int, kw: int, sh: int, sw: int, fmt: DBBFormat,
+                      tiles: dict, itemsize: float = 4.0, cal=None) -> float:
+    """Modeled seconds for one fused-conv launch under a tile config."""
+    cal = _resolve_cal(cal)
+    macs, bytes_, grid = conv_cost_terms(batch, ho, wo, c_in, f, kh, kw,
+                                         sh, sw, fmt, tiles, itemsize)
+    return (max(macs / cal.peak_macs, bytes_ / cal.hbm_bw)
+            + grid * cal.step_overhead_s)
 
 
 # ---------------------------------------------------------------------------
@@ -295,22 +336,15 @@ class TuneResult:
 CONFIRM_MARGIN = 1.05
 
 
-def interleaved_medians(fn_a, fn_b, *, warmup: int = 1, reps: int = 5):
-    """Median wall times (us) of two nullary callables sampled alternately
+def interleaved_medians(fn_a, fn_b, *, warmup: int = 1, reps: int = 5,
+                        stat: str = "median"):
+    """Wall times (us) of two nullary callables sampled alternately
     (A, B, A, B, …), so environment drift cancels out of the comparison —
-    the harness for winner-vs-default confirmation and for benchmarks."""
-    for _ in range(max(0, warmup)):
-        jax.block_until_ready(fn_a())
-        jax.block_until_ready(fn_b())
-    sa, sb = [], []
-    for _ in range(max(1, reps)):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn_a())
-        sa.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn_b())
-        sb.append(time.perf_counter() - t0)
-    return statistics.median(sa) * 1e6, statistics.median(sb) * 1e6
+    the harness for winner-vs-default confirmation and for benchmarks.
+    Delegates to the canonical :func:`repro.xla_utils.interleaved_time_us`
+    (one code path for tuner, calibration, and benchmark comparisons);
+    ``stat='min'`` over generous reps is the noise-robust gating choice."""
+    return interleaved_time_us(fn_a, fn_b, warmup=warmup, reps=reps, stat=stat)
 
 
 def _search(kind, sig, candidates, cost_fn, build, default_tiles, *,
@@ -408,9 +442,12 @@ def tune_matmul(m: int, k: int, n: int, fmt: DBBFormat, *,
     def build(t):
         return lambda: ops.vdbb_matmul(a, dw, bm=t["bm"], bn=t["bn"], kb=t["kb"])
 
+    from repro.kernels import calibrate
+
+    cal = calibrate.get_calibration(cache=cache)  # per-backend pruning (§12)
     return _search(
         kind, sig, matmul_candidates(m, k, n, fmt, keep=keep),
-        lambda t: modeled_matmul_cost(m, k, n, fmt, t, itemsize),
+        lambda t: modeled_matmul_cost(m, k, n, fmt, t, itemsize, cal=cal),
         build, default_matmul_tiles(m, k, n, fmt, kind == core.KIND_MATMUL_TC),
         top_k=top_k, reps=reps, warmup=warmup, cache=cache, save=save,
     )
@@ -470,10 +507,14 @@ def tune_conv(batch: int, h: int, w: int, c: int, f: int, kh: int, kw: int,
 
     itemsize = float(jnp.dtype(dtype).itemsize)
     mfmt = fmt or DENSE
+
+    from repro.kernels import calibrate
+
+    cal = calibrate.get_calibration(cache=cache)  # per-backend pruning (§12)
     return _search(
         kind, sig, conv_candidates(ho, wo, f, keep=keep),
         lambda t: modeled_conv_cost(batch, ho, wo, c, f, kh, kw, sh, sw,
-                                    mfmt, t, itemsize),
+                                    mfmt, t, itemsize, cal=cal),
         build, default_conv_tiles(ho, wo, f),
         top_k=top_k, reps=reps, warmup=warmup, cache=cache, save=save,
     )

@@ -1,0 +1,263 @@
+"""Per-backend calibration of the roofline cost model (DESIGN.md §12).
+
+The autotuner prunes its candidate search with an analytic roofline model
+(``repro.kernels.autotune.modeled_matmul_cost`` / ``modeled_conv_cost``)
+whose machine-balance constants were, before this module, the *static*
+TPU-v5e datasheet numbers regardless of where the code actually runs. On
+CPU (interpret-mode Pallas) the per-grid-step overhead is ~25× the
+assumed 2µs, so the model's candidate ranking — and therefore which
+configs ever get measured — was anchored to the wrong machine. The
+paper's §V design-space evaluation is credible precisely because every
+modeled number is validated against implementation measurements; this
+module is the software analog of that validation loop:
+
+1. **probe** — launch a small fixed set of compressed-matmul kernels
+   whose tile configs spread the three cost terms (executed MACs, HBM
+   bytes, grid steps) across an order of magnitude each, timed with the
+   shared noise-robust harness (``min`` over interleaved-style repeated
+   samples, ``repro.xla_utils.time_samples_us``);
+2. **fit** — least-squares the linear surrogate
+   ``t ≈ macs/peak + bytes/bw + steps·overhead`` (coefficients clamped
+   non-negative; unidentifiable terms fall back to the datasheet
+   defaults) — :func:`fit_calibration` is pure and unit-testable;
+3. **persist** — the fitted :class:`Calibration` is stored per backend in
+   the same versioned autotune cache file (its own
+   ``CALIBRATION_VERSION`` invalidates independently of tile entries),
+   so repeat runs and CI are fit-free;
+4. **consult** — ``modeled_matmul_cost``/``modeled_conv_cost`` resolve
+   the active calibration (installed → cached → default) on every call,
+   so the pruning ranking is per-backend measured, not assumed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.energy_model import TPU_V5E
+from repro.core.vdbb import DBBFormat, dbb_encode
+from repro.xla_utils import time_samples_us
+
+CALIBRATION_VERSION = 1
+
+# Datasheet fallbacks (the pre-§12 static constants): machine balance from
+# the shared TPU-v5e numbers in the energy model, per-grid-step overhead a
+# compiled-backend estimate. Absolute values only matter for ranking.
+DEFAULT_PEAK_MACS = TPU_V5E["peak_bf16_flops"] / 2
+DEFAULT_HBM_BW = TPU_V5E["hbm_bw"]
+DEFAULT_STEP_OVERHEAD_S = 2e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Fitted (or default) roofline constants for one backend."""
+
+    backend: str
+    peak_macs: float        # effective MAC/s
+    hbm_bw: float           # effective bytes/s
+    step_overhead_s: float  # per-grid-step launch/dispatch overhead
+    residual: float = 0.0   # rms relative fit error over the probe set
+    source: str = "default"  # 'default' | 'fit' | 'cache'
+
+
+def default_calibration(backend: Optional[str] = None) -> Calibration:
+    return Calibration(
+        backend=backend or jax.default_backend(),
+        peak_macs=DEFAULT_PEAK_MACS,
+        hbm_bw=DEFAULT_HBM_BW,
+        step_overhead_s=DEFAULT_STEP_OVERHEAD_S,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cache entry (lives inside the autotune TuneCache file, own version)
+# ---------------------------------------------------------------------------
+
+
+def to_entry(cal: Calibration) -> dict:
+    return {
+        "version": CALIBRATION_VERSION,
+        "backend": cal.backend,
+        "peak_macs": cal.peak_macs,
+        "hbm_bw": cal.hbm_bw,
+        "step_overhead_s": cal.step_overhead_s,
+        "residual": cal.residual,
+    }
+
+
+def from_entry(entry: dict) -> Optional[Calibration]:
+    """Parse a cached calibration entry; None on version mismatch or any
+    non-finite/non-positive constant (measurements, not correctness data —
+    silently dropping them is always safe)."""
+    import math
+
+    if not isinstance(entry, dict) or entry.get("version") != CALIBRATION_VERSION:
+        return None
+    try:
+        vals = [float(entry[k]) for k in ("peak_macs", "hbm_bw", "step_overhead_s")]
+    except (KeyError, TypeError, ValueError):
+        return None
+    if not all(math.isfinite(v) and v > 0 for v in vals):
+        return None
+    return Calibration(
+        backend=str(entry.get("backend", "")),
+        peak_macs=vals[0], hbm_bw=vals[1], step_overhead_s=vals[2],
+        residual=float(entry.get("residual", 0.0)), source="cache",
+    )
+
+
+# In-process installed calibrations, one per backend (the fast path the
+# cost model reads; `calibrate()` and `set_active` write it).
+_ACTIVE: dict = {}
+
+
+def set_active(cal: Calibration) -> None:
+    _ACTIVE[cal.backend] = cal
+
+
+def clear_active() -> None:
+    _ACTIVE.clear()
+
+
+def get_calibration(backend: Optional[str] = None, cache=None) -> Calibration:
+    """Active → cached → default, never None. ``cache`` is a
+    ``repro.kernels.autotune.TuneCache`` (or a path for one); pass the
+    search's cache so tuning and calibration share one file."""
+    backend = backend or jax.default_backend()
+    hit = _ACTIVE.get(backend)
+    if hit is not None:
+        return hit
+    if cache is not None:
+        from repro.kernels.autotune import TuneCache
+
+        if not isinstance(cache, TuneCache):
+            cache = TuneCache(cache)
+        cal = from_entry(cache.calibration.get(backend))
+        if cal is not None:
+            return cal
+    return default_calibration(backend)
+
+
+# ---------------------------------------------------------------------------
+# Probe set
+# ---------------------------------------------------------------------------
+
+_PROBE_FMT = DBBFormat(8, 3, "matrix")
+
+# (m, k, n, tiles) — tile configs chosen to spread grid-step count (1 →
+# 128) and traffic/compute volume an order of magnitude each, so the three
+# coefficients of the linear surrogate are separately identifiable.
+PROBES = (
+    (64, 256, 128, {"bm": 64, "bn": 128, "kb": 32}),   # 1 step
+    (64, 256, 128, {"bm": 64, "bn": 128, "kb": 8}),    # 4 steps
+    (64, 256, 128, {"bm": 64, "bn": 128, "kb": 2}),    # 16 steps
+    (64, 256, 128, {"bm": 32, "bn": 64, "kb": 8}),     # 16 steps, retiled
+    (64, 256, 128, {"bm": 16, "bn": 32, "kb": 4}),     # 128 steps
+    (128, 512, 256, {"bm": 128, "bn": 256, "kb": 64}),  # 1 big step
+    (128, 512, 256, {"bm": 64, "bn": 128, "kb": 16}),   # 16 big steps
+)
+
+
+def measure_probes(*, reps: int = 9, warmup: int = 1) -> list:
+    """Measure the probe set: ``[{macs, bytes, steps, t_s}, ...]`` with
+    ``t_s`` the min-of-k wall time (noise-robust, see xla_utils)."""
+    from repro.kernels import ops
+    from repro.kernels.autotune import matmul_cost_terms
+
+    out = []
+    for m, k, n, tiles in PROBES:
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        a = jax.random.normal(k1, (m, k), jnp.float32)
+        dw = dbb_encode(jax.random.normal(k2, (k, n), jnp.float32),
+                        _PROBE_FMT, prune=True)
+        fn = lambda a=a, dw=dw, t=tiles: ops.vdbb_matmul(a, dw, **t)
+        t_us = min(time_samples_us(fn, warmup=warmup, reps=reps))
+        macs, bytes_, steps = matmul_cost_terms(m, k, n, _PROBE_FMT, tiles, 4.0)
+        out.append({"macs": macs, "bytes": bytes_, "steps": steps,
+                    "t_s": t_us * 1e-6})
+    return out
+
+
+def fit_calibration(probes, backend: Optional[str] = None) -> Calibration:
+    """Fit the linear surrogate ``t ≈ macs/peak + bytes/bw + steps·ovh``
+    to measured probes (pure — unit-testable with synthetic probes).
+
+    Plain least squares, then negative coefficients are zeroed and the
+    remaining columns refit (one active-set pass); a zeroed /
+    unidentifiable term keeps its datasheet default, so the returned
+    constants are always finite and positive.
+    """
+    import numpy as np
+
+    backend = backend or jax.default_backend()
+    X = np.array([[p["macs"], p["bytes"], p["steps"]] for p in probes], float)
+    t = np.array([p["t_s"] for p in probes], float)
+    if len(probes) < 3 or not np.all(np.isfinite(X)) or not np.all(np.isfinite(t)):
+        return default_calibration(backend)
+    active = [0, 1, 2]
+    coef = np.zeros(3)
+    for _ in range(3):  # at most 3 columns can drop
+        c, *_ = np.linalg.lstsq(X[:, active], t, rcond=None)
+        if np.all(c >= 0):
+            coef[:] = 0.0
+            coef[active] = c
+            break
+        active = [a for a, ci in zip(active, c) if ci >= 0]
+        if not active:
+            return default_calibration(backend)
+    pred = X @ coef
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rel = (pred - t) / np.where(t > 0, t, 1.0)
+    residual = float(np.sqrt(np.mean(rel**2)))
+    d = default_calibration(backend)
+    return Calibration(
+        backend=backend,
+        peak_macs=1.0 / coef[0] if coef[0] > 0 else d.peak_macs,
+        hbm_bw=1.0 / coef[1] if coef[1] > 0 else d.hbm_bw,
+        step_overhead_s=coef[2] if coef[2] > 0 else d.step_overhead_s,
+        residual=residual,
+        source="fit",
+    )
+
+
+def calibrate(cache=None, *, reps: int = 9, warmup: int = 1,
+              force: bool = False, save: bool = True) -> Calibration:
+    """Resolve (or measure) this backend's calibration and install it.
+
+    Cache hits skip the probe run entirely (``force=True`` re-measures);
+    the result lands in the in-process active table either way, so every
+    subsequent ``modeled_*_cost`` call — and therefore the autotuner's
+    pruning — uses it.
+    """
+    from repro.kernels.autotune import TuneCache
+
+    if not isinstance(cache, TuneCache):
+        cache = TuneCache(cache)
+    backend = jax.default_backend()
+    if not force:
+        hit = from_entry(cache.calibration.get(backend))
+        if hit is not None:
+            set_active(hit)
+            return hit
+    cal = fit_calibration(measure_probes(reps=reps, warmup=warmup), backend)
+    set_active(cal)
+    cache.calibration[backend] = to_entry(cal)
+    if save:
+        cache.save()
+    return cal
+
+
+def main() -> None:
+    """``python -m repro.kernels.calibrate`` — fit and persist."""
+    cal = calibrate(force=True)
+    print(f"backend={cal.backend} source={cal.source}")
+    print(f"  peak_macs       {cal.peak_macs:.3e} MAC/s")
+    print(f"  hbm_bw          {cal.hbm_bw:.3e} B/s")
+    print(f"  step_overhead   {cal.step_overhead_s * 1e6:.2f} us/step")
+    print(f"  rms rel residual {cal.residual:.3f}")
+
+
+if __name__ == "__main__":
+    main()

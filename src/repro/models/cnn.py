@@ -27,7 +27,7 @@ from repro.core.quant import QuantDBBWeight, quantize
 from repro.core.sparse_conv import DBBConv2d
 from repro.core.sparse_linear import DBBLinear, PruneSchedule
 from repro.core.vdbb import DBBFormat, DENSE
-from repro.kernels.core import _pair
+from repro.kernels.core import _pair, default_interpret
 
 
 @dataclasses.dataclass(frozen=True)
@@ -222,8 +222,13 @@ class SparseCNN:
             out_scale = params[f"l{i + 1}"]["aq"] if i + 1 < n else None
             if isinstance(p["w"], QuantDBBWeight):
                 x = m.quant_serve(p, x, relu=True, out_scale=out_scale)
-            elif m.kernel_mode == "pallas" and out_scale is not None:
+            elif m.kernel_mode == "pallas" and out_scale is not None \
+                    and not default_interpret():
                 # fp stem, one kernel: dense conv with the fused epilogue
+                # (compiled backends only — interpret-mode Pallas dense
+                # conv is far slower than XLA's native conv on CPU, so
+                # there the ref-path conv + standalone quantize wins;
+                # DESIGN.md §12)
                 from repro.kernels import ops  # deferred: kernels are optional
 
                 x = ops.fused_im2col_conv(

@@ -1,0 +1,164 @@
+"""Measured-wall-time regression gates + bench-harness exit contract
+(DESIGN.md §12).
+
+Covers ``benchmarks/check_regression.py``: the artifact schema validation
+(required keys, finite positive numbers — a truncated or hand-edited
+artifact must fail loudly), the fused wall-time gates with their
+self-calibrating noise-widened margins, and ``benchmarks/run.py``'s
+exit-code contract via a real subprocess with a deliberately failing
+bench module injected through ``REPRO_BENCH_EXTRA``.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from benchmarks import check_regression as cr
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _fused_artifact(**wall_overrides):
+    wall = {
+        "layer_fused": 1000.0, "layer_unfused": 1100.0,
+        "cnn_int8_resident": 950.0, "cnn_per_layer_dequant": 960.0,
+    }
+    wall.update(wall_overrides)
+    return {
+        "layers": [
+            {"name": "l0", "saved_frac": 0.93, "hbm_bytes_fused": 36812,
+             "hbm_bytes_unfused": 561100},
+            {"name": "l1", "saved_frac": 0.82, "hbm_bytes_fused": 58368,
+             "hbm_bytes_unfused": 320512},
+        ],
+        "wall_time_us": wall,
+        "noise_frac": {"layer": 0.05, "cnn": 0.05},
+        "harness": {"stat": "min", "reps": 25, "warmup": 2,
+                    "interleaved": True, "backend": "cpu"},
+    }
+
+
+class TestSchema:
+    def test_valid_artifact_passes(self):
+        assert cr.schema_errors("BENCH_fused.json", _fused_artifact()) == []
+
+    def test_missing_key(self):
+        art = _fused_artifact()
+        del art["wall_time_us"]["cnn_int8_resident"]
+        errs = cr.schema_errors("BENCH_fused.json", art)
+        assert any("cnn_int8_resident" in e for e in errs)
+
+    @pytest.mark.parametrize("bad", [float("nan"), float("inf"), 0, -3.0,
+                                     "1000", True, None])
+    def test_non_finite_or_non_positive_number(self, bad):
+        art = _fused_artifact(layer_fused=bad)
+        errs = cr.schema_errors("BENCH_fused.json", art)
+        assert any("layer_fused" in e for e in errs), (bad, errs)
+
+    def test_empty_layers_list(self):
+        art = _fused_artifact()
+        art["layers"] = []
+        errs = cr.schema_errors("BENCH_fused.json", art)
+        assert any("layers" in e for e in errs)
+
+    def test_unknown_artifact_has_no_schema(self):
+        assert cr.schema_errors("BENCH_other.json", {}) == []
+
+    def test_serve_schema(self):
+        ok = {"plan_us": 10.0, "unplanned_jit_us": 12.0, "bit_identical": True}
+        assert cr.schema_errors("BENCH_serve.json", ok) == []
+        errs = cr.schema_errors("BENCH_serve.json",
+                                {"plan_us": 10.0, "unplanned_jit_us": 12.0})
+        assert any("bit_identical" in e for e in errs)
+
+
+class TestWallGates:
+    def _check(self, art, tmp_path, monkeypatch):
+        (tmp_path / "BENCH_fused.json").write_text(json.dumps(art))
+        monkeypatch.setattr(cr, "ROOT", tmp_path)
+        return cr.check_fused()
+
+    def test_clean_artifact_passes(self, tmp_path, monkeypatch):
+        assert self._check(_fused_artifact(), tmp_path, monkeypatch) == []
+
+    def test_fused_layer_regression_trips(self, tmp_path, monkeypatch):
+        # margin at noise 0.05 = 1.1 * 1.05 = 1.155; 1300 > 1100 * 1.155
+        art = _fused_artifact(layer_fused=1300.0)
+        errs = self._check(art, tmp_path, monkeypatch)
+        assert any("layer_fused" in e for e in errs)
+
+    def test_chain_regression_trips(self, tmp_path, monkeypatch):
+        art = _fused_artifact(cnn_int8_resident=1200.0)
+        errs = self._check(art, tmp_path, monkeypatch)
+        assert any("cnn_int8_resident" in e for e in errs)
+
+    def test_noise_widens_margin_but_cap_bounds_it(self, tmp_path, monkeypatch):
+        # 1250/1100 = 1.136 fails at noise 0 (margin 1.1) but passes once
+        # the measured noise widens the margin to 1.1 * 1.3 = 1.43
+        art = _fused_artifact(layer_fused=1250.0)
+        art["noise_frac"]["layer"] = 0.0
+        assert self._check(art, tmp_path, monkeypatch) != []
+        art["noise_frac"]["layer"] = 0.3
+        assert self._check(art, tmp_path, monkeypatch) == []
+        # ...but a pathologically noisy artifact cannot gate itself
+        # vacuously: the cap bounds the margin at 1.1 * (1 + cap) = 1.65
+        art = _fused_artifact(layer_fused=2000.0)
+        art["noise_frac"]["layer"] = 50.0
+        assert self._check(art, tmp_path, monkeypatch) != []
+
+    def test_schema_failure_short_circuits(self, tmp_path, monkeypatch):
+        art = _fused_artifact()
+        del art["noise_frac"]
+        errs = self._check(art, tmp_path, monkeypatch)
+        assert errs and all("schema" in e for e in errs)
+
+    def test_saved_frac_floor_still_enforced(self, tmp_path, monkeypatch):
+        art = _fused_artifact()
+        art["layers"][0]["saved_frac"] = 0.10
+        errs = self._check(art, tmp_path, monkeypatch)
+        assert any("hard floor" in e for e in errs)
+
+    def test_baselines_carry_wall_margins(self):
+        base = json.loads((ROOT / "benchmarks" / "bench_baselines.json").read_text())
+        assert base["fused_wall_margin"] >= 1.0
+        assert 0 < base["fused_noise_cap"] <= 1.0
+
+
+@pytest.mark.slow
+class TestRunExitCode:
+    """benchmarks/run.py must exit nonzero when *any* module fails."""
+
+    def _run(self, tmp_path, body, only):
+        (tmp_path / "fake_bench.py").write_text(textwrap.dedent(body))
+        env = dict(os.environ)
+        env["REPRO_BENCH_EXTRA"] = "fake_bench"
+        env["PYTHONPATH"] = os.pathsep.join(
+            [str(tmp_path), str(ROOT), env.get("PYTHONPATH", "")])
+        return subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--smoke",
+             "--only", only],
+            capture_output=True, text=True, env=env, cwd=ROOT, timeout=120,
+        )
+
+    def test_failing_module_exits_nonzero_with_summary(self, tmp_path):
+        proc = self._run(tmp_path, """
+            def run(report):
+                report("fake/ok", 1.0)
+                raise AssertionError("deliberate gate failure")
+        """, only="fake_bench")
+        assert proc.returncode == 1, proc.stderr
+        assert "FAILED 1/1" in proc.stderr
+        assert "deliberate gate failure" in proc.stderr
+        assert "fake_bench/FAILED" in proc.stdout
+
+    def test_passing_module_exits_zero(self, tmp_path):
+        proc = self._run(tmp_path, """
+            def run(report):
+                report("fake/ok", 1.0)
+        """, only="fake_bench")
+        assert proc.returncode == 0, proc.stderr
+        assert "fake/ok" in proc.stdout

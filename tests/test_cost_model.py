@@ -1,0 +1,205 @@
+"""Per-backend calibrated roofline cost model (DESIGN.md §12).
+
+Covers :mod:`repro.kernels.calibrate`: the pure least-squares fit
+(synthetic-coefficient recovery, non-negative clamping, unidentifiable
+fallbacks), the cache entry round-trip and version/validity invalidation
+(mirroring test_autotune's TuneCache contracts — the calibration rides in
+the same file), resolution precedence (active → cached → default), the
+cost-model plumbing (``modeled_*_cost`` consult the calibration), and one
+measured integration check: after fitting on real probes, the model must
+rank an extreme grid-step pair the same way the measurements do.
+"""
+import json
+import math
+
+import pytest
+
+from repro.core.vdbb import DBBFormat
+from repro.kernels import autotune, calibrate
+from repro.kernels.calibrate import Calibration
+
+FMT = DBBFormat(8, 3, "matrix")
+
+TRUE = dict(peak_macs=1e12, hbm_bw=1e10, step_overhead_s=5e-6)
+
+
+def _synthetic_probes(n=8):
+    """Probes whose times follow the linear surrogate exactly."""
+    probes = []
+    for i in range(n):
+        macs = 1e7 * (i + 1)
+        bytes_ = 3e5 * ((i % 4) + 1)
+        steps = 4 ** (i % 4)
+        t = (macs / TRUE["peak_macs"] + bytes_ / TRUE["hbm_bw"]
+             + steps * TRUE["step_overhead_s"])
+        probes.append({"macs": macs, "bytes": bytes_, "steps": steps, "t_s": t})
+    return probes
+
+
+@pytest.fixture(autouse=True)
+def _clean_active():
+    calibrate.clear_active()
+    yield
+    calibrate.clear_active()
+
+
+class TestFit:
+    def test_recovers_synthetic_coefficients(self):
+        cal = calibrate.fit_calibration(_synthetic_probes(), backend="cpu")
+        assert cal.source == "fit"
+        assert cal.peak_macs == pytest.approx(TRUE["peak_macs"], rel=1e-6)
+        assert cal.hbm_bw == pytest.approx(TRUE["hbm_bw"], rel=1e-6)
+        assert cal.step_overhead_s == pytest.approx(
+            TRUE["step_overhead_s"], rel=1e-6)
+        assert cal.residual == pytest.approx(0.0, abs=1e-9)
+
+    def test_unidentifiable_terms_keep_defaults(self):
+        """Times driven purely by grid steps: the macs/bytes coefficients
+        are ~0, get clamped, and fall back to the datasheet defaults while
+        the step term fits."""
+        probes = [
+            {"macs": 1e7, "bytes": 1e5, "steps": s, "t_s": s * 7e-6}
+            for s in (1, 4, 16, 64, 128, 32)
+        ]
+        cal = calibrate.fit_calibration(probes, backend="cpu")
+        assert cal.step_overhead_s == pytest.approx(7e-6, rel=1e-3)
+        assert cal.peak_macs == calibrate.DEFAULT_PEAK_MACS
+        assert cal.hbm_bw == calibrate.DEFAULT_HBM_BW
+
+    def test_too_few_probes_falls_back_to_default(self):
+        cal = calibrate.fit_calibration(_synthetic_probes(2), backend="cpu")
+        assert cal.source == "default"
+
+    def test_nonfinite_probe_falls_back(self):
+        probes = _synthetic_probes()
+        probes[0]["t_s"] = float("nan")
+        assert calibrate.fit_calibration(probes, backend="cpu").source == "default"
+
+
+class TestCacheRoundTrip:
+    def _fit(self):
+        return calibrate.fit_calibration(_synthetic_probes(), backend="cpu")
+
+    def test_entry_round_trip(self):
+        cal = self._fit()
+        back = calibrate.from_entry(calibrate.to_entry(cal))
+        assert back is not None and back.source == "cache"
+        assert back.peak_macs == cal.peak_macs
+        assert back.hbm_bw == cal.hbm_bw
+        assert back.step_overhead_s == cal.step_overhead_s
+
+    def test_persists_in_tune_cache_file(self, tmp_path):
+        path = tmp_path / "autotune.json"
+        cache = autotune.TuneCache(path)
+        cache.calibration["cpu"] = calibrate.to_entry(self._fit())
+        cache.save()
+        # reload through a fresh cache object, then through get_calibration
+        again = autotune.TuneCache(path)
+        cal = calibrate.from_entry(again.calibration["cpu"])
+        assert cal is not None and cal.peak_macs == pytest.approx(1e12)
+        resolved = calibrate.get_calibration(backend="cpu", cache=path)
+        assert resolved.source == "cache"
+        assert resolved.step_overhead_s == pytest.approx(5e-6)
+
+    def test_version_mismatch_invalidates(self):
+        entry = calibrate.to_entry(self._fit())
+        entry["version"] = calibrate.CALIBRATION_VERSION + 1
+        assert calibrate.from_entry(entry) is None
+
+    @pytest.mark.parametrize("bad", [float("nan"), float("inf"), 0.0, -1.0,
+                                     None, "fast"])
+    def test_invalid_constants_invalidate(self, bad):
+        entry = calibrate.to_entry(self._fit())
+        entry["hbm_bw"] = bad
+        assert calibrate.from_entry(entry) is None
+
+    def test_corrupt_entry_shapes(self):
+        assert calibrate.from_entry(None) is None
+        assert calibrate.from_entry({"version": calibrate.CALIBRATION_VERSION}) is None
+
+    def test_tile_entries_survive_next_to_calibration(self, tmp_path):
+        """The calibration section must not clobber tile entries (and vice
+        versa) — they share one file under independent versions."""
+        path = tmp_path / "autotune.json"
+        cache = autotune.TuneCache(path)
+        cache.put("cpu|matmul_tc|64x128", {"tiles": {"bm": 64}})
+        cache.calibration["cpu"] = calibrate.to_entry(self._fit())
+        cache.save()
+        data = json.loads(path.read_text())
+        assert "entries" in data and "calibration" in data
+        again = autotune.TuneCache(path)
+        assert again.get("cpu|matmul_tc|64x128") == {"tiles": {"bm": 64}}
+        assert calibrate.from_entry(again.calibration["cpu"]) is not None
+
+
+class TestResolution:
+    def test_active_wins_over_cache_and_default(self, tmp_path):
+        path = tmp_path / "autotune.json"
+        cache = autotune.TuneCache(path)
+        cache.calibration["cpu"] = calibrate.to_entry(
+            calibrate.fit_calibration(_synthetic_probes(), backend="cpu"))
+        cache.save()
+        active = Calibration(backend="cpu", peak_macs=1.0, hbm_bw=1.0,
+                             step_overhead_s=1.0, source="fit")
+        calibrate.set_active(active)
+        assert calibrate.get_calibration(backend="cpu", cache=path) is active
+        calibrate.clear_active()
+        assert calibrate.get_calibration(
+            backend="cpu", cache=path).source == "cache"
+
+    def test_default_when_nothing_else(self, tmp_path):
+        cal = calibrate.get_calibration(
+            backend="cpu", cache=tmp_path / "missing.json")
+        assert cal.source == "default"
+        assert cal.peak_macs == calibrate.DEFAULT_PEAK_MACS
+
+    def test_modeled_cost_consults_calibration(self):
+        """Same shape, two calibrations with wildly different step
+        overhead: the modeled ranking of a 1-step vs many-step config must
+        flip with the calibration — the §12 point of the fit."""
+        tiles_1step = {"bm": 64, "bn": 128, "kb": 32}   # grid = 1
+        tiles_many = {"bm": 16, "bn": 32, "kb": 4}      # grid = 128
+        compute_bound = Calibration(  # steps are free -> smaller tiles fine
+            backend="cpu", peak_macs=1e9, hbm_bw=1e12, step_overhead_s=1e-12)
+        overhead_bound = Calibration(  # steps dominate -> 1 big step wins
+            backend="cpu", peak_macs=1e15, hbm_bw=1e15, step_overhead_s=1e-3)
+
+        def cost(tiles, cal):
+            return autotune.modeled_matmul_cost(64, 256, 128, FMT, tiles,
+                                                4.0, cal=cal)
+
+        delta_cb = cost(tiles_many, compute_bound) - cost(tiles_1step, compute_bound)
+        delta_ob = cost(tiles_many, overhead_bound) - cost(tiles_1step, overhead_bound)
+        assert abs(delta_cb) < 1e-6          # compute-bound: ~indifferent
+        assert delta_ob > 0.1                # overhead-bound: 127 extra ms
+
+    def test_cost_terms_are_finite_and_scale(self):
+        macs, bytes_, steps = autotune.matmul_cost_terms(
+            64, 256, 128, FMT, {"bm": 64, "bn": 128, "kb": 32}, 4.0)
+        assert all(math.isfinite(v) and v > 0 for v in (macs, bytes_, steps))
+        assert steps == 1
+        _, _, steps_many = autotune.matmul_cost_terms(
+            64, 256, 128, FMT, {"bm": 16, "bn": 32, "kb": 4}, 4.0)
+        assert steps_many == 128
+
+
+@pytest.mark.slow
+class TestMeasuredOrdering:
+    def test_model_ranks_extreme_pair_like_measurements(self, tmp_path):
+        """Integration: fit on real probes, then the calibrated model must
+        order the probe set's own extreme pair (fastest vs slowest
+        measured) the same way the measurements did. Interpret-mode grid
+        overhead differs by >100x across the pair, so the ordering is
+        robust even on a noisy host."""
+        probes = calibrate.measure_probes(reps=3, warmup=1)
+        cal = calibrate.fit_calibration(probes, backend="cpu")
+        assert cal.source == "fit"
+        lo = min(probes, key=lambda p: p["t_s"])
+        hi = max(probes, key=lambda p: p["t_s"])
+        assert hi["t_s"] > 2 * lo["t_s"], "probe spread collapsed"
+
+        def modeled(p):
+            return max(p["macs"] / cal.peak_macs, p["bytes"] / cal.hbm_bw) \
+                + p["steps"] * cal.step_overhead_s
+
+        assert modeled(hi) > modeled(lo)

@@ -234,6 +234,110 @@ class TestPickTile:
 
 
 # ---------------------------------------------------------------------------
+# ragged shapes: pad-and-slice stays bit-exact, and never fires when the
+# shapes already divide (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+class _SpyJnp:
+    """Forwards every attribute to the real jnp, counting ``pad`` calls —
+    installed over ``ops.jnp`` so a trace through the dispatch layer
+    reveals whether the pad-and-slice escape hatch actually fired."""
+
+    def __init__(self):
+        self.pad_calls = 0
+
+    def __getattr__(self, name):
+        attr = getattr(jnp, name)
+        if name == "pad":
+            def counted(*a, **k):
+                self.pad_calls += 1
+                return attr(*a, **k)
+            return counted
+        return attr
+
+
+class TestRaggedShapes:
+    @pytest.mark.parametrize("m,n", [(7, 10), (7, 130), (67, 10), (67, 130)])
+    def test_fused_matmul_ragged_mn_bit_exact(self, m, n):
+        """Non-dividing M and N with the full fused epilogue: the padded
+        rows/columns (including the padded out_scale columns) slice away
+        bit-exactly against the integer oracle."""
+        k = 56  # 7 K-blocks at bz=8: the default kb must handle it too
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(11), 3)
+        a = jax.random.normal(k1, (m, k))
+        w = jax.random.normal(k2, (k, n))
+        b = jax.random.normal(k3, (n,))
+        fmt = DBBFormat(8, 3, "matrix")
+        qw = quant.quantize_dbb(dbb_encode(w, fmt, prune=True))
+        s_a = quant.dynamic_act_scale(a)
+        got = ops.quant_matmul(
+            a, qw, s_a, bias=b, relu=True, out_scale=0.06,
+            bm=16, bn=32, interpret=True,  # neither divides m/n
+        )
+        acc = quant.int_matmul_ref(quant.quantize(a, s_a),
+                                   ref.dbb_decode(qw.as_dbb()))
+        want = ref.quant_epilogue_ref(acc, s_a * qw.scales, bias=b,
+                                      relu=True, out_scale=0.06)
+        assert got.shape == (m, n) and got.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("stride", [1, 2])
+    def test_fused_conv_odd_spatial_bit_exact(self, stride):
+        """Odd spatial dims (15x15, stride 1/2) through the fused conv
+        epilogue: conv tiles resolve to exact divisors (no padding path)
+        and stay bit-exact against the oracle."""
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(12), 3)
+        x = jax.random.normal(k1, (2, 15, 15, 8))
+        w4 = jax.random.normal(k2, (3, 3, 8, 16))
+        b = jax.random.normal(k3, (16,))
+        qw = quant.quantize_dbb(
+            dbb_encode_conv(w4, DBBFormat(8, 3, "matrix"), prune=True))
+        s_a = quant.dynamic_act_scale(x)
+        got = ops.quant_conv(x, qw, 3, 3, s_a, bias=b, relu=True,
+                             out_scale=0.05, stride=stride, interpret=True)
+        acc = ref.sparse_conv_int_ref(quant.quantize(x, s_a), qw.as_dbb(),
+                                      3, 3, stride=stride)
+        want = ref.quant_epilogue_ref(acc, s_a * qw.scales, bias=b,
+                                      relu=True, out_scale=0.05)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_pad_tile_unit_contract(self):
+        # dividing: no padding, requested tile honored
+        assert core.pad_tile(64, 32, 128) == (32, 64)
+        assert core.pad_tile(64, None, 128) == (64, 64)
+        assert core.pick_tile_padded(128, 128) == (128, 128)
+        # ragged: padded up to the next tile multiple
+        assert core.pad_tile(67, 16, 128) == (16, 80)
+        # oversized explicit tile clamps to the dimension
+        assert core.pad_tile(10, 64, 128) == (10, 10)
+
+    def test_no_pad_when_shapes_divide(self, monkeypatch):
+        """When every launch dim divides its tile, the dispatch layer must
+        not touch ``jnp.pad`` at all — fresh shapes force a retrace with a
+        spy installed over ``ops.jnp``."""
+        spy = _SpyJnp()
+        monkeypatch.setattr(ops, "jnp", spy)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(13))
+        a = jax.random.normal(k1, (24, 64))
+        w = jax.random.normal(k2, (64, 48))
+        fmt = DBBFormat(8, 3, "matrix")
+        qw = quant.quantize_dbb(dbb_encode(w, fmt, prune=True))
+        s_a = quant.dynamic_act_scale(a)
+        y = ops.quant_matmul(a, qw, s_a, bias=jnp.zeros(48), relu=True,
+                             out_scale=0.05, bm=8, bn=16, kb=2,
+                             interpret=True)
+        assert y.shape == (24, 48)
+        assert spy.pad_calls == 0
+
+        # positive control on another fresh shape: a ragged M does pad
+        a2 = jax.random.normal(k1, (23, 64))
+        y2 = ops.quant_matmul(a2, qw, s_a, bm=8, bn=16, kb=2, interpret=True)
+        assert y2.shape == (23, 48)
+        assert spy.pad_calls > 0
+
+
+# ---------------------------------------------------------------------------
 # model: head kernel mode + the int8-resident chain
 # ---------------------------------------------------------------------------
 

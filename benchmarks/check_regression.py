@@ -40,8 +40,15 @@ time)`` — host-speed-relative, so the gate catches order-of-magnitude
 tail-latency regressions without hardcoding microseconds). Bucketed
 serving must also have been bit-identical to per-request serving.
 
+``BENCH_lm.json`` gates the §13 LM datapath: compressed projection
+GEMMs must not lose to the dense matmul the pre-PR-8 ``apply_linear``
+fallback silently ran (``lm_wall_margin``, noise-widened like the fused
+gate), and the frozen ``LM.plan()`` prefill must be bit-identical to —
+and no slower than — the jitted unplanned forward. The int8 GEMM
+numbers are recorded but not gated (XLA:CPU has no native int8 path).
+
 Exit code 1 on any regression — run after ``python -m benchmarks.run
---smoke`` (which rewrites all three artifacts).
+--smoke`` (which rewrites all four artifacts).
 """
 from __future__ import annotations
 
@@ -93,6 +100,18 @@ SCHEMAS = {
         "plan_us": "num",
         "unplanned_jit_us": "num",
         "bit_identical": bool,
+    },
+    "BENCH_lm.json": {
+        "gemms[].name": str,
+        "gemms[].dense_us": "num",
+        "gemms[].compressed_us": "num",
+        "gemms[].int8_us": "num",
+        "plan.plan_us": "num",
+        "plan.unplanned_us": "num",
+        "plan.bit_identical": bool,
+        "noise_frac.plan": "frac",
+        "harness.reps": "num",
+        "harness.stat": str,
     },
 }
 
@@ -250,8 +269,47 @@ def check_serve() -> list:
     return errors
 
 
+def check_lm() -> list:
+    errors = []
+    path = ROOT / "BENCH_lm.json"
+    if not path.exists():
+        return [f"{path.name} missing (run `python -m benchmarks.run --smoke`)"]
+    data = json.loads(path.read_text())
+    errors += schema_errors(path.name, data)
+    if errors:
+        return errors
+    noise = data.get("noise_frac", {})
+    # the §13 contract: compressed projections must not lose to the dense
+    # matmul the pre-PR-8 fallback silently ran (nnz/bz of the MACs)
+    margin_base = _BASE["lm_wall_margin"]
+    cap = _BASE["lm_noise_cap"]
+    for g in data.get("gemms", []):
+        nz = noise.get(g["name"])
+        nz = nz if isinstance(nz, (int, float)) and math.isfinite(nz) else cap
+        margin = margin_base * (1.0 + min(max(nz, 0.0), cap))
+        if g["compressed_us"] > g["dense_us"] * margin:
+            errors.append(
+                f"lm/{g['name']}: compressed {g['compressed_us']:.0f}us > "
+                f"dense {g['dense_us']:.0f}us x margin {margin:.2f} "
+                f"(= lm_wall_margin {margin_base} widened by noise {nz})"
+            )
+    plan = data.get("plan") or {}
+    if not plan.get("bit_identical", False):
+        errors.append("lm/plan: frozen plan not bit-identical to the "
+                      "unplanned forward")
+    nz = noise.get("plan")
+    nz = nz if isinstance(nz, (int, float)) and math.isfinite(nz) else cap
+    margin = margin_base * (1.0 + min(max(nz, 0.0), cap))
+    if plan and plan["plan_us"] > plan["unplanned_us"] * margin:
+        errors.append(
+            f"lm/plan: plan {plan['plan_us']:.0f}us > unplanned "
+            f"{plan['unplanned_us']:.0f}us x margin {margin:.2f}"
+        )
+    return errors
+
+
 def main() -> int:
-    errors = check_fused() + check_autotune() + check_serve()
+    errors = check_fused() + check_autotune() + check_serve() + check_lm()
     for e in errors:
         print(f"REGRESSION: {e}", file=sys.stderr)
     if not errors:

@@ -46,6 +46,7 @@ BENCHES = [
     ("fused (epilogue fusion, DESIGN §9)", "benchmarks.bench_fused", True),
     ("autotune (tile search + frozen plans, DESIGN §10)", "benchmarks.bench_autotune", True),
     ("serve (continuous-batching tier, DESIGN §11)", "benchmarks.bench_serve", True),
+    ("lm (LM VDBB routing + plans, DESIGN §13)", "benchmarks.bench_lm", True),
     ("roofline (EXPERIMENTS §Roofline)", "benchmarks.roofline", True),
 ]
 

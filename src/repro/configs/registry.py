@@ -141,6 +141,21 @@ def rwkv6_3b(sparsity=0.625) -> ModelConfig:
     )
 
 
+def qwen2_tiny(sparsity=0.625) -> ModelConfig:
+    """Scaled-down qwen2 shape for CPU-runnable LM serving demos and the
+    §13 plan/bench lane: same block structure (GQA kv-share, QKV bias,
+    SwiGLU, RMSNorm), fp32 end-to-end, unscanned layers so a frozen plan
+    is structurally identical to forward()."""
+    return ModelConfig(
+        name="qwen2-tiny", family="dense", num_layers=2, d_model=128,
+        num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=512,
+        qkv_bias=True, mlp="swiglu", norm="rmsnorm", rope_theta=1e6,
+        q_chunk=64, remat="none", scan_layers=False,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        dbb=_dbb(sparsity),
+    )
+
+
 ARCHS = {
     "qwen2-72b": qwen2_72b,
     "qwen2.5-32b": qwen2_5_32b,
@@ -152,6 +167,7 @@ ARCHS = {
     "internvl2-2b": internvl2_2b,
     "musicgen-medium": musicgen_medium,
     "rwkv6-3b": rwkv6_3b,
+    "qwen2-tiny": qwen2_tiny,
 }
 
 

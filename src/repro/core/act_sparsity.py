@@ -303,3 +303,34 @@ def record_activation(x: jax.Array, name: str = "", macs: int = 0):
     if col is None or isinstance(x, jax.core.Tracer):
         return
     col.add(x, name=name, macs=macs)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical activation names (calibration addressing, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def act_scope(name: str):
+    """Push a name segment onto the thread-local scope stack.
+
+    Models wrap structural units (layer groups, blocks, sub-modules) so a
+    leaf recorded as ``wq`` lands in the stats as e.g. ``g0.b1.mixer.wq`` —
+    the stable address :func:`repro.models.model.LM.quantize` uses to match
+    calibration stats back to the param leaf that produced them.
+    """
+    stack = getattr(_CTX, "scope", None)
+    if stack is None:
+        stack = _CTX.scope = []
+    stack.append(name)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def scoped(name: str = "") -> str:
+    """The current dotted scope joined with ``name`` (may be empty)."""
+    stack = getattr(_CTX, "scope", None) or []
+    parts = list(stack) + ([name] if name else [])
+    return ".".join(parts)

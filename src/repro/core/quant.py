@@ -188,6 +188,34 @@ def quant_matmul_ref(aq: jax.Array, qw: QuantDBBWeight, act_scale) -> jax.Array:
     return acc.astype(jnp.float32) * (act_scale * qw.scales)[None, :]
 
 
+def quant_matmul_gather_ref(
+    aq: jax.Array, qw: QuantDBBWeight, act_scale
+) -> jax.Array:
+    """Compressed-K int8 matmul (group='matrix' only) — the quantized twin
+    of :func:`repro.core.vdbb.dbb_matmul_gather_ref`.
+
+    The int8 activation blocks are gathered ("muxed") down to the nnz
+    positions the shared block pattern keeps, then contracted against the
+    (nb·nnz, N) int8 value stream with exact int32 accumulation. Integer
+    sums are order-independent, so this is bit-identical to
+    :func:`quant_matmul_ref` while never materializing the dense weight.
+    """
+    fmt = qw.fmt
+    k, n = qw.shape
+    if fmt.group_size(n) != n:
+        raise ValueError("gather formulation requires group='matrix'")
+    nb = k // fmt.bz
+    m = aq.shape[0]
+    ab = aq.reshape(m, nb, fmt.bz)
+    idx = qw.indices[:, :, 0].astype(jnp.int32)  # (nb, nnz)
+    ac = jnp.take_along_axis(ab, idx.T[None].transpose(0, 2, 1), axis=2)
+    acc = jnp.matmul(  # (m, nb*nnz) x (nb*nnz, n), exact int32
+        ac.reshape(m, nb * fmt.nnz).astype(jnp.int32),
+        qw.values.reshape(nb * fmt.nnz, n).astype(jnp.int32),
+    )
+    return acc.astype(jnp.float32) * (act_scale * qw.scales)[None, :]
+
+
 def quant_conv_ref(
     xq: jax.Array, qw: QuantDBBWeight, kh: int, kw: int, act_scale,
     *, stride=1, padding="SAME",

@@ -173,6 +173,14 @@ class DBBLinear:
         wp = params["w"]
         quant = isinstance(wp, QuantDBBWeight)
         tiled = self._use_pallas(batch) and isinstance(wp, (DBBWeight, QuantDBBWeight))
+        if tiled:
+            nb, rem = divmod(self.in_features, wp.fmt.bz)
+            if rem:
+                raise ValueError(
+                    f"DBBLinear.make_plan: in_features={self.in_features} is "
+                    f"not a multiple of the DBB block size bz={wp.fmt.bz} "
+                    f"(ragged K has no compressed-block layout; pad K or "
+                    f"serve with kernel_mode='ref')")
         tiles: dict = {}
         if tiled and tune != "off":
             from repro.kernels import autotune  # deferred: kernels optional

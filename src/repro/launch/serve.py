@@ -26,6 +26,13 @@ throughput, aggregation shape, and the zero-retrace check:
 
   PYTHONPATH=src python -m repro.launch.serve --arch sparse-cnn-tiny --smoke \
       --server --max-batch 8 --max-wait-ms 5 --requests 64
+
+``--lm-plan`` serves LM prefill through the same frozen-plan machinery
+(DESIGN.md §13): compress → calibrate → INT8-quantize → ``LM.plan()``,
+with a bit-identity check against the jitted unplanned forward:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-tiny --lm-plan \
+      --batch 2 --prompt-len 32
 """
 from __future__ import annotations
 
@@ -164,6 +171,37 @@ def serve_cnn_continuous(args, model, qparams, xpool):
     return results
 
 
+def serve_lm_plan(args):
+    """LM prefill served through a frozen ModelPlan (DESIGN.md §13):
+    compress → calibrate → INT8-quantize → plan, then a bit-identity
+    check against the jitted unplanned forward and a timed comparison."""
+    sparsity = None if args.dense else args.sparsity
+    cfg = (smoke_config if args.smoke else get_config)(args.arch, sparsity=sparsity)
+    if cfg.dbb is None:
+        raise SystemExit("--lm-plan needs a DBB config (drop --dense)")
+    model = LM(cfg)
+    params = model.compress(model.init(jax.random.PRNGKey(0)))
+    batch = make_batch(cfg, batch=args.batch, seq=args.prompt_len, kind="serve")
+    tokens = batch["tokens"]
+    _, stats = model.forward(params, batch, collect_act_stats=True)
+    qparams = model.quantize(params, stats)
+    print(f"[serve] {cfg.name}: INT8-calibrated VDBB LM "
+          f"(nnz={cfg.dbb.nnz}/{cfg.dbb.bz}, kernel_mode={cfg.kernel_mode})")
+    plan = model.plan(qparams, batch=args.batch, seq=args.prompt_len,
+                      tune=args.tune)
+    print(f"[serve] frozen plan: {len(plan.layers)} stages ({args.tune})")
+    ref = jax.jit(lambda t: model.forward(qparams, {"tokens": t}))
+    bit = bool((plan(tokens) == ref(tokens)).all())
+    print(f"[serve] plan vs unplanned forward bit-identical: {bit}")
+    from repro.xla_utils import median_time_us
+
+    plan_us = median_time_us(plan.serve, tokens, warmup=1, reps=args.steps)
+    ref_us = median_time_us(ref, tokens, warmup=1, reps=args.steps)
+    print(f"[serve] prefill ({args.batch}x{args.prompt_len}): plan "
+          f"{plan_us:.0f}us vs unplanned {ref_us:.0f}us")
+    return bit
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -180,6 +218,9 @@ def main(argv=None):
     ap.add_argument("--tune", choices=("off", "cache", "search"), default="cache",
                     help="CNN plan tile resolution: autotune cache hits only "
                          "(default), full search, or pick_tile defaults")
+    ap.add_argument("--lm-plan", action="store_true",
+                    help="LM: serve prefill through a frozen ModelPlan "
+                         "(DESIGN §13) instead of the decode loop")
     ap.add_argument("--server", action="store_true",
                     help="CNN: continuous-batching tier (DESIGN §11) under a "
                          "Poisson load instead of a fixed-batch loop")
@@ -197,6 +238,8 @@ def main(argv=None):
 
     if args.arch in CNN_ARCHS:
         return serve_cnn(args)
+    if args.lm_plan:
+        return serve_lm_plan(args)
 
     sparsity = None if args.dense else args.sparsity
     cfg = (smoke_config if args.smoke else get_config)(args.arch, sparsity=sparsity)

@@ -108,9 +108,13 @@ class GQAttention:
         hd = c.hd
         b, s, _ = x.shape
         kv_src = memory if self.cross else x
-        q = apply_linear(x, p["wq"], p.get("bq"))
-        k = apply_linear(kv_src, p["wk"], p.get("bk"))
-        v = apply_linear(kv_src, p["wv"], p.get("bv"))
+        km = c.kernel_mode
+        q = apply_linear(x, p["wq"], p.get("bq"),
+                         aq=p.get("wq_aq"), kernel_mode=km, name="wq")
+        k = apply_linear(kv_src, p["wk"], p.get("bk"),
+                         aq=p.get("wk_aq"), kernel_mode=km, name="wk")
+        v = apply_linear(kv_src, p["wv"], p.get("bv"),
+                         aq=p.get("wv_aq"), kernel_mode=km, name="wv")
         q = q.reshape(b, s, c.num_heads, hd)
         k = k.reshape(b, kv_src.shape[1], c.num_kv_heads, hd)
         v = v.reshape(b, kv_src.shape[1], c.num_kv_heads, hd)
@@ -140,7 +144,8 @@ class GQAttention:
                 qg, k, v, pos1, pos1, window=self.window, q_chunk=c.q_chunk
             )
         out = out.reshape(b, s, c.num_heads * hd)
-        y = apply_linear(out, p["wo"])
+        y = apply_linear(out, p["wo"],
+                         aq=p.get("wo_aq"), kernel_mode=km, name="wo")
         return y, {"k": k_cache, "v": v_cache}
 
     # ------------------------------------------------------------- decode
@@ -159,19 +164,27 @@ class GQAttention:
         c = self.cfg
         hd = c.hd
         b = x.shape[0]
-        q = apply_linear(x, p["wq"], p.get("bq")).reshape(b, 1, c.num_heads, hd)
+        km = c.kernel_mode
+        q = apply_linear(x, p["wq"], p.get("bq"),
+                         aq=p.get("wq_aq"), kernel_mode=km,
+                         name="wq").reshape(b, 1, c.num_heads, hd)
         if self.cross:
             # cross K/V were precomputed at prefill; cache is read-only.
             k, v = cache["k"], cache["v"]
             qg = q.reshape(b, 1, c.num_kv_heads, c.num_heads // c.num_kv_heads, hd)
             kp = jnp.zeros((k.shape[1],), jnp.int32)
             out = _attend(qg, k, v, jnp.ones((1,), jnp.int32), kp)
-            y = apply_linear(out.reshape(b, 1, c.num_heads * hd), p["wo"])
+            y = apply_linear(out.reshape(b, 1, c.num_heads * hd), p["wo"],
+                             aq=p.get("wo_aq"), kernel_mode=km, name="wo")
             return y, cache
         posv = jnp.full((b, 1), pos, jnp.int32)
         q = rope(q, posv, c.rope_theta)
-        k_new = apply_linear(x, p["wk"], p.get("bk")).reshape(b, 1, c.num_kv_heads, hd)
-        v_new = apply_linear(x, p["wv"], p.get("bv")).reshape(b, 1, c.num_kv_heads, hd)
+        k_new = apply_linear(x, p["wk"], p.get("bk"),
+                             aq=p.get("wk_aq"), kernel_mode=km,
+                             name="wk").reshape(b, 1, c.num_kv_heads, hd)
+        v_new = apply_linear(x, p["wv"], p.get("bv"),
+                             aq=p.get("wv_aq"), kernel_mode=km,
+                             name="wv").reshape(b, 1, c.num_kv_heads, hd)
         k_new = rope(k_new, posv, c.rope_theta)
         cap = cache["k"].shape[1]
         slot = jnp.mod(pos, cap) if self.window else jnp.minimum(pos, cap - 1)
@@ -192,7 +205,8 @@ class GQAttention:
             qg, k, v, jnp.full((1,), pos, jnp.int32), kpos,
             window=self.window, kv_valid_len=pos + 1,
         )
-        y = apply_linear(out.reshape(b, 1, c.num_heads * hd), p["wo"])
+        y = apply_linear(out.reshape(b, 1, c.num_heads * hd), p["wo"],
+                         aq=p.get("wo_aq"), kernel_mode=km, name="wo")
         return y, {"k": k, "v": v}
 
 
@@ -233,27 +247,35 @@ class MLAttention:
     def _q(self, p, x):
         c = self.cfg
         b, s, _ = x.shape
+        km = c.kernel_mode
         qd = c.qk_nope_dim + c.qk_rope_dim
         if c.q_lora_rank:
-            q = apply_linear(rms_norm(apply_linear(x, p["wq_a"]), p["q_norm"]), p["wq_b"])
+            qa = apply_linear(x, p["wq_a"], aq=p.get("wq_a_aq"),
+                              kernel_mode=km, name="wq_a")
+            q = apply_linear(rms_norm(qa, p["q_norm"]), p["wq_b"],
+                             aq=p.get("wq_b_aq"), kernel_mode=km, name="wq_b")
         else:
-            q = apply_linear(x, p["wq"])
+            q = apply_linear(x, p["wq"], aq=p.get("wq_aq"),
+                             kernel_mode=km, name="wq")
         return q.reshape(b, s, c.num_heads, qd)
 
     def __call__(self, p, x, positions, memory=None):
         c = self.cfg
         b, s, _ = x.shape
         q = self._q(p, x)
+        km = c.kernel_mode
         q_nope, q_rope = q[..., : c.qk_nope_dim], q[..., c.qk_nope_dim :]
         q_rope = rope(q_rope, positions, c.rope_theta)
-        kv_a = apply_linear(x, p["wkv_a"])
+        kv_a = apply_linear(x, p["wkv_a"], aq=p.get("wkv_a_aq"),
+                            kernel_mode=km, name="wkv_a")
         c_kv = rms_norm(kv_a[..., : c.kv_lora_rank], p["kv_norm"])
         k_rope = rope(
             kv_a[..., c.kv_lora_rank :].reshape(b, s, 1, c.qk_rope_dim),
             positions,
             c.rope_theta,
         )
-        kv = apply_linear(c_kv, p["wkv_b"]).reshape(
+        kv = apply_linear(c_kv, p["wkv_b"], aq=p.get("wkv_b_aq"),
+                          kernel_mode=km, name="wkv_b").reshape(
             b, s, c.num_heads, c.qk_nope_dim + c.v_head_dim
         )
         k_nope, v = kv[..., : c.qk_nope_dim], kv[..., c.qk_nope_dim :]
@@ -273,7 +295,8 @@ class MLAttention:
             q_chunk=c.q_chunk,
         )
         out = out.reshape(b, s, c.num_heads * c.v_head_dim)
-        y = apply_linear(out, p["wo"])
+        y = apply_linear(out, p["wo"], aq=p.get("wo_aq"),
+                         kernel_mode=km, name="wo")
         return y, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
 
     def init_cache(self, batch, max_len, dtype):
@@ -287,11 +310,13 @@ class MLAttention:
         """Absorbed-matmul decode: scores and context in the latent space."""
         c = self.cfg
         b = x.shape[0]
+        km = c.kernel_mode
         posv = jnp.full((b, 1), pos, jnp.int32)
         q = self._q(p, x)
         q_nope, q_rope = q[..., : c.qk_nope_dim], q[..., c.qk_nope_dim :]
         q_rope = rope(q_rope, posv, c.rope_theta)
-        kv_a = apply_linear(x, p["wkv_a"])
+        kv_a = apply_linear(x, p["wkv_a"], aq=p.get("wkv_a_aq"),
+                            kernel_mode=km, name="wkv_a")
         c_kv_new = rms_norm(kv_a[..., : c.kv_lora_rank], p["kv_norm"])
         k_rope_new = rope(
             kv_a[..., c.kv_lora_rank :].reshape(b, 1, 1, c.qk_rope_dim), posv, c.rope_theta
@@ -303,14 +328,15 @@ class MLAttention:
             cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, pos, 0)
         )
         ckv = shard(ckv, ("batch", "cache_seq", None))
-        wkv_b = p["wkv_b"].reshape(c.kv_lora_rank, c.num_heads, c.qk_nope_dim + c.v_head_dim) \
-            if not hasattr(p["wkv_b"], "fmt") else None
-        if wkv_b is None:  # compressed serving: decode via expanded weight
+        wkv_b = p["wkv_b"]
+        if hasattr(wkv_b, "fmt"):  # compressed serving: decode via expanded
+            from repro.core.quant import QuantDBBWeight, dequantize_dbb
             from repro.core.vdbb import dbb_decode
 
-            wkv_b = dbb_decode(p["wkv_b"]).reshape(
-                c.kv_lora_rank, c.num_heads, c.qk_nope_dim + c.v_head_dim
-            )
+            if isinstance(wkv_b, QuantDBBWeight):
+                wkv_b = dequantize_dbb(wkv_b)  # fp values, compressed layout
+            wkv_b = dbb_decode(wkv_b)
+        wkv_b = wkv_b.reshape(c.kv_lora_rank, c.num_heads, c.qk_nope_dim + c.v_head_dim)
         w_uk = wkv_b[..., : c.qk_nope_dim]  # (r, H, nope)
         w_uv = wkv_b[..., c.qk_nope_dim :]  # (r, H, v)
         q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk.astype(x.dtype))
@@ -323,5 +349,6 @@ class MLAttention:
         pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
         ctx = jnp.einsum("bhqs,bsr->bqhr", pr, ckv.astype(x.dtype))
         out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv.astype(x.dtype))
-        y = apply_linear(out.reshape(b, 1, c.num_heads * c.v_head_dim), p["wo"])
+        y = apply_linear(out.reshape(b, 1, c.num_heads * c.v_head_dim), p["wo"],
+                         aq=p.get("wo_aq"), kernel_mode=km, name="wo")
         return y, {"c_kv": ckv, "k_rope": krp}

@@ -269,35 +269,28 @@ class SparseCNN:
         tuned) for — other batch shapes still run, but retrace and fall
         back to registry/default tiles.
         """
-        from repro.models.plan import LayerPlan, ModelPlan, params_fingerprint
+        from repro.models.plan import PlanBuilder
 
-        if tune != "off":
-            from repro.kernels.autotune import TuneCache
-
-            if not isinstance(cache, TuneCache):
-                cache = TuneCache(cache)  # parse the on-disk cache once, not per layer
         layers = self.layers()
         convs, head = layers[:-1], layers[-1]
         fused = self._int8_chain_ready(layers, params)
         c = self.cfg
         h = w = c.image_size
         n = len(convs)
-        kw = dict(tune=tune, cache=cache, top_k=top_k, reps=reps)
-        stages = []
+        pb = PlanBuilder(c.name, params, batch=batch, tune=tune, cache=cache,
+                         top_k=top_k, reps=reps)
         for i, m in enumerate(convs):
             out_scale = None
             if fused and i + 1 < n:
                 out_scale = params[f"l{i + 1}"]["aq"]
-            run, tiles = m.make_plan(
-                params[f"l{i}"], batch=batch, h=h, w=w, relu=True,
-                out_scale=out_scale, fused=fused, **kw,
-            )
-            stages.append(LayerPlan(f"l{i}", "conv", tuple(sorted(tiles.items())), run))
+            pb.stage(f"l{i}", "conv", m.make_plan, params[f"l{i}"],
+                     batch=batch, h=h, w=w, relu=True, out_scale=out_scale,
+                     fused=fused)
             h, w = m.out_hw(h, w)
-        stages.append(LayerPlan("gap", "pool", (), lambda x: x.mean(axis=(1, 2))))
-        run, tiles = head.make_plan(params[f"l{n}"], batch=batch, fused=fused, **kw)
-        stages.append(LayerPlan(f"l{n}", "linear", tuple(sorted(tiles.items())), run))
-        return ModelPlan(c.name, params_fingerprint(params), tuple(stages), batch)
+        pb.raw("gap", "pool", lambda x: x.mean(axis=(1, 2)))
+        pb.stage(f"l{n}", "linear", head.make_plan, params[f"l{n}"],
+                 batch=batch, fused=fused)
+        return pb.build()
 
     def plan_set(self, params: dict, *, max_batch: Optional[int] = None,
                  buckets: Optional[Sequence[int]] = None, dp: int = 1,
@@ -315,27 +308,15 @@ class SparseCNN:
         nearest bucket and slice back, bit-identical to per-request
         serving.
         """
-        from repro.models.plan import PlanSet, make_buckets, params_fingerprint
+        from repro.models.plan import build_plan_set, resolve_tune_cache
 
-        if buckets is None:
-            if max_batch is None:
-                raise ValueError("plan_set needs max_batch or explicit buckets")
-            buckets = make_buckets(max_batch, dp=dp)
-        buckets = tuple(sorted({int(b) for b in buckets}))
-        bad = [b for b in buckets if b < 1 or b % dp]
-        if bad:
-            raise ValueError(f"buckets {bad} not positive multiples of dp={dp}")
-        if tune != "off":
-            from repro.kernels.autotune import TuneCache
-
-            if not isinstance(cache, TuneCache):
-                cache = TuneCache(cache)  # one on-disk parse for all buckets
-        plans = {
-            b: self.plan(params, batch=b, tune=tune, cache=cache, top_k=top_k,
-                         reps=reps)
-            for b in buckets
-        }
-        return PlanSet(self.cfg.name, params_fingerprint(params), buckets, plans)
+        cache = resolve_tune_cache(tune, cache)  # one parse for all buckets
+        return build_plan_set(
+            self.cfg.name, params,
+            lambda b: self.plan(params, batch=b, tune=tune, cache=cache,
+                                top_k=top_k, reps=reps),
+            max_batch=max_batch, buckets=buckets, dp=dp,
+        )
 
     # ------------------------------------------- the paper's technique
     def constrain(self, params: dict, step=None, schedule: Optional[PruneSchedule] = None) -> dict:

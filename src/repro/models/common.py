@@ -27,7 +27,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.vdbb import DBBFormat, DBBWeight, dbb_prune
+# dbb_decode is imported at module scope (not inside the fallback branch)
+# so tests can monkeypatch ``repro.models.common.dbb_decode`` and assert the
+# hot path never densifies (the decode-spy in tests/test_lm_datapath.py).
+from repro.core.quant import QuantDBBWeight
+from repro.core.vdbb import (
+    DBBFormat,
+    DBBWeight,
+    dbb_decode,
+    dbb_matmul_gather_ref,
+    dbb_prune,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -63,7 +73,9 @@ def init_params(defs, key, default_dtype=jnp.float32):
         elif p.init == "ones":
             w = jnp.ones(p.shape, dtype)
         elif p.init == "scaled":  # fan-in scaled truncated normal
-            fan_in = p.shape[0] if len(p.shape) >= 2 else max(p.shape[0], 1)
+            # fan-in is the contraction dim: second-to-last, so stacked
+            # layer-group weights (G, K, N) scale by K, not by G
+            fan_in = p.shape[-2] if len(p.shape) >= 2 else max(p.shape[0], 1)
             std = p.scale / np.sqrt(fan_in)
             w = std * jax.random.truncated_normal(k, -2, 2, p.shape).astype(dtype)
         else:
@@ -110,10 +122,12 @@ def tree_get(tree, path):
 
 
 def tree_set(tree, path, val):
+    """Functionally set (or insert — e.g. the ``<leaf>_aq`` calibration
+    siblings ``LM.quantize`` adds) a leaf at ``path``."""
     if not path:
         return val
     out = dict(tree)
-    out[path[0]] = tree_set(tree[path[0]], path[1:], val)
+    out[path[0]] = tree_set(tree.get(path[0], {}), path[1:], val)
     return out
 
 
@@ -196,46 +210,111 @@ def rope(x, positions, theta=10000.0):
     return out.astype(x.dtype)
 
 
-def apply_linear(x: jax.Array, w, bias=None) -> jax.Array:
-    """x @ w where w is a dense array or a compressed DBBWeight.
+def _use_pallas(kernel_mode: str, m: int) -> bool:
+    """Pallas kernels want at least one 8-row M tile; tiny-M calls (e.g.
+    single-token decode) fall back to the ref formulation — the same
+    policy as ``DBBLinear._use_pallas``."""
+    return kernel_mode == "pallas" and m >= 8
 
-    The DBBWeight path is the GSPMD-friendly einsum form of the
-    time-unrolled VDBB matmul (tc mode): one-hot "mux" gather of the
-    activations into compressed-K, then a dense contraction whose FLOPs
-    scale with nnz/bz. On TPU the Pallas kernel implements the same
-    contraction; this form is used under pjit so XLA shards it.
+
+def _compressed_linear(x: jax.Array, w: DBBWeight, kernel_mode: str) -> jax.Array:
+    """Compressed matmul for a fp DBBWeight — never densifies for the
+    group='matrix' (tc) formats the LM configs use."""
+    fmt = w.fmt
+    k, n = w.shape
+    lead = x.shape[:-1]
+    m = x.size // max(k, 1)
+    tc = fmt.group_size(n) == n
+    if _use_pallas(kernel_mode, m):
+        from repro.kernels import ops
+
+        y = ops.vdbb_matmul(x.reshape(m, k), w)
+        return y.reshape(*lead, n).astype(x.dtype)
+    if tc:
+        if current_rules() is None:
+            y = dbb_matmul_gather_ref(x.reshape(m, k), w)
+            return y.reshape(*lead, n)
+        # Under pjit keep the GSPMD-friendly einsum form of the same
+        # compressed contraction: one-hot "mux" gather of the activations
+        # into compressed-K, then a dense contraction whose FLOPs scale
+        # with nnz/bz — XLA shards it; no dense weight is materialized.
+        nb = k // fmt.bz
+        xb = x.reshape(*lead, nb, fmt.bz)
+        onehot = jax.nn.one_hot(
+            w.indices[:, :, 0].astype(jnp.int32), fmt.bz, dtype=x.dtype
+        )  # (nb, nnz, bz)
+        ac = jnp.einsum("...bi,bji->...bj", xb, onehot)  # mux
+        return jnp.einsum("...bj,bjn->...n", ac, w.values.astype(x.dtype))
+    # per-column pattern (bw): no compressed ref form exists — expand and
+    # contract dense (the Pallas bw kernel covers the compressed path).
+    return x @ dbb_decode(w).astype(x.dtype)
+
+
+def _quant_linear(x: jax.Array, qw: QuantDBBWeight, aq, kernel_mode: str) -> jax.Array:
+    """INT8 matmul for a quantized compressed weight → fp32 (DESIGN.md §8).
+
+    ``aq`` is the calibrated per-tensor activation scale (None → dynamic);
+    an int8 ``x`` is the previous layer's requantized codes (int8-resident
+    chaining, §9) and requires ``aq``.
+    """
+    from repro.core import quant
+
+    k, n = qw.shape
+    lead = x.shape[:-1]
+    m = x.size // max(k, 1)
+    x2 = x.reshape(m, k)
+    if _use_pallas(kernel_mode, m):
+        from repro.kernels import ops
+
+        return ops.quant_matmul(x2, qw, aq).reshape(*lead, n)
+    xq, s_a = quant.resolve_quant_input(x2, aq)
+    if qw.fmt.group_size(n) == n:
+        y = quant.quant_matmul_gather_ref(xq, qw, s_a)
+    else:
+        y = quant.quant_matmul_ref(xq, qw, s_a)
+    return y.reshape(*lead, n)
+
+
+def apply_linear(
+    x: jax.Array, w, bias=None, *, aq=None, kernel_mode: str = "ref",
+    name: str = "",
+) -> jax.Array:
+    """x @ w where w is dense, a compressed :class:`DBBWeight`, or an int8
+    :class:`QuantDBBWeight` — the LM stack's single on-ramp to the VDBB
+    datapath (DESIGN.md §13).
+
+    Compressed weights dispatch to the compressed-K matmul — the gather
+    ref (``dbb_matmul_gather_ref`` / ``quant_matmul_gather_ref``) or the
+    Pallas kernels (``ops.vdbb_matmul`` / ``ops.quant_matmul``) per
+    ``kernel_mode`` — never to ``x @ dbb_decode(w)`` on the hot path.
+    Quantized outputs are fp32 from the int32 flush and are cast back to
+    the activation dtype for floating inputs.
 
     While an activation collector is installed (DESIGN.md §7;
     ``LM.forward(collect_act_stats=True)``) the input activation is
-    measured here, MAC-weighted by this GEMM's executed occupancy.
+    measured here under the current ``act_scope`` as ``<scope>.<name>``,
+    MAC-weighted by this GEMM's executed occupancy — the address
+    ``LM.quantize`` later uses to look up this layer's calibrated scale.
     """
     from repro.core import act_sparsity
 
     if act_sparsity.collecting():
         k = x.shape[-1]
         rows = x.size // max(k, 1)
-        if isinstance(w, DBBWeight):
+        if isinstance(w, (DBBWeight, QuantDBBWeight)):
             k_eff = (w.shape[0] // w.fmt.bz) * w.fmt.nnz
             macs = rows * k_eff * w.shape[1]
         else:
             macs = rows * k * w.shape[-1]
-        act_sparsity.record_activation(x, macs=macs)
-    if isinstance(w, DBBWeight):
-        fmt = w.fmt
-        k, n = w.shape
-        nb = k // fmt.bz
-        lead = x.shape[:-1]
-        xb = x.reshape(*lead, nb, fmt.bz)
-        if w.indices.shape[-1] == 1:  # shared pattern (tc): compressed compute
-            onehot = jax.nn.one_hot(
-                w.indices[:, :, 0].astype(jnp.int32), fmt.bz, dtype=x.dtype
-            )  # (nb, nnz, bz)
-            ac = jnp.einsum("...bi,bji->...bj", xb, onehot)  # mux
-            y = jnp.einsum("...bj,bjn->...n", ac, w.values.astype(x.dtype))
-        else:  # per-column pattern (bw): expand then dense contract
-            from repro.core.vdbb import dbb_decode
-
-            y = x @ dbb_decode(w).astype(x.dtype)
+        act_sparsity.record_activation(
+            x, name=act_sparsity.scoped(name), macs=macs
+        )
+    if isinstance(w, QuantDBBWeight):
+        y = _quant_linear(x, w, aq, kernel_mode)
+        if jnp.issubdtype(x.dtype, jnp.floating) and y.dtype != x.dtype:
+            y = y.astype(x.dtype)
+    elif isinstance(w, DBBWeight):
+        y = _compressed_linear(x, w, kernel_mode)
     else:
         y = x @ w.astype(x.dtype)
     if bias is not None:

@@ -68,6 +68,9 @@ class ModelConfig:
     dbb: Optional[DBBFormat] = None
     # serve with compressed DBBWeight leaves (bandwidth win at decode)
     serve_compressed: bool = True
+    # 'ref' (jnp gather formulation) | 'pallas' (VDBB kernels) — how
+    # apply_linear executes compressed/quantized projections (§13)
+    kernel_mode: str = "ref"
 
     embed_scale: bool = False  # multiply embeddings by sqrt(d_model) (gemma)
 

@@ -13,6 +13,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant import QuantDBBWeight
 from repro.models.common import Param, apply_linear, linear_def, shard
 
 
@@ -37,13 +38,29 @@ class DenseMLP:
 
     def __call__(self, p, x):
         c = self.cfg
-        up = apply_linear(x, p["w_up"])
+        km = c.kernel_mode
+        up = apply_linear(x, p["w_up"], aq=p.get("w_up_aq"),
+                          kernel_mode=km, name="w_up")
         if c.mlp == "swiglu":
-            up = jax.nn.silu(apply_linear(x, p["w_gate"])) * up
+            gate = apply_linear(x, p["w_gate"], aq=p.get("w_gate_aq"),
+                                kernel_mode=km, name="w_gate")
+            up = jax.nn.silu(gate) * up
         else:
             up = jax.nn.gelu(up)
         up = shard(up, ("batch", None, "mlp"))
-        return apply_linear(up, p["w_down"])
+        # §9 int8-resident chain: when the down projection is quantized and
+        # carries a calibrated activation scale, requantize the hidden
+        # activation once here and feed the int8 codes straight into the
+        # down GEMM — bit-identical to quantizing inside (same scale, same
+        # rounding), but the fp hidden tensor never round-trips.
+        aq_down = p.get("w_down_aq")
+        if isinstance(p.get("w_down"), QuantDBBWeight) and aq_down is not None:
+            from repro.core.quant import quantize
+
+            up = quantize(up, aq_down)
+        y = apply_linear(up, p["w_down"], aq=aq_down,
+                         kernel_mode=km, name="w_down")
+        return y.astype(x.dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,7 +90,12 @@ class MoEMLP:
         else:
             y = self._global(p, x)  # decode: a handful of tokens
         if c.num_shared_experts:
-            y = y + DenseMLP(c, d_ff=c.num_shared_experts * c.d_ff)(p["shared"], x)
+            from repro.core.act_sparsity import act_scope
+
+            with act_scope("shared"):
+                y = y + DenseMLP(c, d_ff=c.num_shared_experts * c.d_ff)(
+                    p["shared"], x
+                )
         return shard(y, ("batch", "seq", "embed"))
 
     def _grouped(self, p, x):
@@ -132,7 +154,10 @@ class MoEMLP:
         return y.reshape(b, s, dm)
 
     def aux_loss(self, p, x):
-        """Load-balance auxiliary loss (mean entropy regularizer)."""
+        """Load-balance (importance) auxiliary loss: ``E · Σ_e frac_e²``
+        where ``frac_e`` is expert e's mean routing probability over the
+        batch. Minimized (value 1.0) by a perfectly uniform router — the
+        squared-importance loss of Shazeer et al., not an entropy term."""
         logits = apply_linear(
             x.reshape(-1, x.shape[-1]).astype(jnp.float32),
             p["router"].astype(jnp.float32),

@@ -20,8 +20,9 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.act_sparsity import act_scope
 from repro.core.sparse_linear import PruneSchedule
-from repro.core.vdbb import DBBFormat, dbb_encode, dbb_prune
+from repro.core.vdbb import DBBFormat, DBBWeight, dbb_encode, dbb_prune
 from repro.models.attention import GQAttention, MLAttention
 from repro.models.common import (
     Param,
@@ -158,7 +159,8 @@ class LM:
         if c.tie_embeddings:
             logits = x @ params["embed"].T.astype(x.dtype)
         else:
-            logits = apply_linear(x, params["lm_head"])
+            logits = apply_linear(x, params["lm_head"],
+                                  kernel_mode=c.kernel_mode, name="lm_head")
         if c.logit_softcap:
             logits = jnp.tanh(logits / c.logit_softcap) * c.logit_softcap
         # note: 'seq' (SP) and 'vocab' both map to 'model' — logits keep the
@@ -180,14 +182,19 @@ class LM:
             y2, cm_shift = mixer.channel_mix(p["mixer"]["cm"], h2, zero)
             x = shard(x + y2, ("batch", "seq", "embed"))
             return x, {**tm_cache, "cm_shift": cm_shift}
-        y, cache = mixer(p["mixer"], h, positions)
+        with act_scope("mixer"):
+            y, cache = mixer(p["mixer"], h, positions)
         x = shard(x + y, ("batch", "seq", "embed"))
         if c.cross_attn:
             hx = self._apply_norm(p["norm_x"], x)
-            yx, xc = GQAttention(c, cross=True)(p["cross"], hx, positions, memory=memory)
+            with act_scope("cross"):
+                yx, xc = GQAttention(c, cross=True)(
+                    p["cross"], hx, positions, memory=memory
+                )
             x = shard(x + yx, ("batch", "seq", "embed"))
             cache = {"self": cache, "cross": xc}
-        y2 = self._mlp()(p["mlp"], self._apply_norm(p["norm2"], x))
+        with act_scope("mlp"):
+            y2 = self._mlp()(p["mlp"], self._apply_norm(p["norm2"], x))
         x = shard(x + y2, ("batch", "seq", "embed"))
         return x, cache
 
@@ -252,7 +259,10 @@ class LM:
         def group_body(x, gp):
             caches = {}
             for i, kind in enumerate(c.pattern):
-                x, cache = self._apply_block(kind, gp[f"b{i}"], x, positions, memory)
+                with act_scope(f"b{i}"):
+                    x, cache = self._apply_block(
+                        kind, gp[f"b{i}"], x, positions, memory
+                    )
                 caches[f"b{i}"] = cache
             return x, caches
 
@@ -272,15 +282,17 @@ class LM:
             caches_l = []
             for g in range(c.num_groups):
                 gp = jax.tree_util.tree_map(lambda a: a[g], params["layers"])
-                h, cch = body(h, gp)
+                with act_scope(f"g{g}"):
+                    h, cch = body(h, gp)
                 caches_l.append(cch)
             caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches_l)
         if c.tail_pattern:
             tails = {}
             for i, kind in enumerate(c.tail_pattern):
-                h, cache = self._apply_block(
-                    kind, params["tail"][f"t{i}"], h, positions, memory
-                )
+                with act_scope("tail"), act_scope(f"t{i}"):
+                    h, cache = self._apply_block(
+                        kind, params["tail"][f"t{i}"], h, positions, memory
+                    )
                 tails[f"t{i}"] = cache
             caches = {"groups": caches, "tail": tails}
         else:
@@ -465,6 +477,143 @@ class LM:
                 dw = jax.vmap(lambda x: dbb_encode(x, fmt, prune=True))(w)
             params = tree_set(params, path, dw)
         return params
+
+    def _stat_absmax(self, stats) -> dict:
+        """name -> max absmax over the calibration records (a name repeats
+        when the same GEMM ran more than once during calibration)."""
+        out = {}
+        for st in stats or []:
+            name = getattr(st, "name", "")
+            amax = float(getattr(st, "absmax", 0.0))
+            if name and amax > 0.0:
+                out[name] = max(out.get(name, 0.0), amax)
+        return out
+
+    def _leaf_act_scales(self, path, absmax):
+        """Calibrated per-tensor act scale(s) for one dbb leaf, or None.
+
+        Stacked leaves (``('layers', 'b{i}', …)``) look up one scoped name
+        per layer group (``g{g}.b{i}.….<leaf>``) and return an (L,) array —
+        ``lax.scan`` slices it back to a scalar per layer; tail leaves use
+        their dotted path directly. Missing calibration → None (the serving
+        path falls back to dynamic quantization).
+        """
+        from repro.core.quant import QMAX
+
+        if path[0] == "layers":
+            suffix = ".".join(path[1:])
+            scales = []
+            for g in range(self.cfg.num_groups):
+                amax = absmax.get(f"g{g}.{suffix}")
+                if amax is None:
+                    return None
+                scales.append(amax / QMAX)
+            return jnp.asarray(scales, jnp.float32)
+        amax = absmax.get(".".join(path))
+        if amax is None:
+            return None
+        return jnp.float32(amax / QMAX)
+
+    def quantize(self, params, stats=None):
+        """INT8-quantize every compressed DBBWeight leaf (DESIGN.md §8/§13).
+
+        ``stats`` is the list returned by
+        ``forward(..., collect_act_stats=True)`` run on *compressed* params:
+        each leaf whose scoped activation name was calibrated gets a static
+        per-tensor act scale stored as a ``<leaf>_aq`` sibling, which
+        ``apply_linear`` picks up (and the §9 int8-resident MLP chain keys
+        on); uncalibrated leaves serve with dynamic quantization.
+        """
+        from repro.core.quant import quantize_dbb
+
+        absmax = self._stat_absmax(stats)
+        for path, _pdef in dbb_leaves(self.defs()):
+            w = tree_get(params, path)
+            if not isinstance(w, DBBWeight):
+                continue  # dense (never compressed) or already quantized
+            qw = quantize_dbb(w) if w.values.ndim == 3 else jax.vmap(quantize_dbb)(w)
+            params = tree_set(params, path, qw)
+            aq = self._leaf_act_scales(path, absmax)
+            if aq is not None:
+                params = tree_set(params, path[:-1] + (path[-1] + "_aq",), aq)
+        return params
+
+    # ------------------------------------------------------------- plan
+    def _tune_gemms(self, params, m, *, tune, cache, top_k, reps):
+        """Resolve measured-best tiles for each unique compressed GEMM
+        shape in the param tree. ``tiles_for_matmul`` installs results
+        into the autotuner's global registry, so the plan's jit trace
+        (ops-layer dispatch) picks them up without per-stage pinning."""
+        from repro.core.quant import QuantDBBWeight
+        from repro.kernels import autotune
+        from repro.models.plan import resolve_tune_cache
+
+        cache = resolve_tune_cache(tune, cache)
+        seen = set()
+        for path, pdef in dbb_leaves(self.defs()):
+            w = tree_get(params, path)
+            if not hasattr(w, "fmt"):
+                continue  # never compressed (e.g. 4-D expert stacks)
+            k, n = pdef.shape[-2:]
+            dtype = (jnp.int8 if isinstance(w, QuantDBBWeight)
+                     else self.cfg.compute_dtype)
+            sig = (m, k, n, w.fmt, jnp.dtype(dtype).name)
+            if sig in seen:
+                continue
+            seen.add(sig)
+            autotune.tiles_for_matmul(m, k, n, w.fmt, dtype, mode=tune,
+                                      cache=cache, top_k=top_k, reps=reps)
+
+    def plan(self, params, *, batch: int, seq: int, tune: str = "cache",
+             cache=None, top_k: int = 4, reps: int = 3):
+        """Freeze a serving plan for a fixed (batch, seq) shape (§13).
+
+        Stages: ``embed`` → one stage per block (layer groups unrolled:
+        ``g{g}.b{i}``, then tail ``t{i}``) → ``head`` (final norm +
+        logits). Composition and staleness come from the shared
+        :class:`~repro.models.plan.ModelPlan` machinery, exactly like the
+        CNN plan. One deviation from the CNN: LM stages carry empty
+        ``tiles`` — GEMM tile choices are resolved once up front via the
+        autotuner registry (``_tune_gemms``) rather than pinned per stage,
+        because a transformer block mixes several GEMMs per stage.
+
+        Raises ``NotImplementedError`` for cross-attention / multimodal
+        configs: their blocks need extra per-call inputs (memory, vision
+        embeds) that a frozen single-input pipeline cannot bind.
+        """
+        from repro.models.plan import PlanBuilder
+
+        c = self.cfg
+        if c.cross_attn or c.frontend:
+            raise NotImplementedError(
+                "LM.plan supports decoder-only text models; cross_attn or "
+                f"frontend={c.frontend!r} needs per-call side inputs")
+        if c.kernel_mode == "pallas" and tune != "off":
+            self._tune_gemms(params, batch * seq, tune=tune, cache=cache,
+                             top_k=top_k, reps=reps)
+        positions = jnp.broadcast_to(
+            jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
+        pb = PlanBuilder(c.name, params, batch=batch)
+        pb.raw("embed", "embed", lambda t: self._embed(params, {"tokens": t}))
+        for g in range(c.num_groups):
+            gp = jax.tree_util.tree_map(lambda a, _g=g: a[_g],
+                                        params["layers"])
+            for i, kind in enumerate(c.pattern):
+                pb.raw(
+                    f"g{g}.b{i}", kind,
+                    lambda x, p=gp[f"b{i}"], k=kind:
+                        self._apply_block(k, p, x, positions, None)[0],
+                )
+        for i, kind in enumerate(c.tail_pattern):
+            pb.raw(
+                f"t{i}", kind,
+                lambda x, p=params["tail"][f"t{i}"], k=kind:
+                    self._apply_block(k, p, x, positions, None)[0],
+            )
+        pb.raw("head", "head",
+               lambda x: self._logits(
+                   params, self._apply_norm(params["final_norm"], x)))
+        return pb.build()
 
     def compressed_abstract(self):
         """ShapeDtypeStruct tree of the *compressed* serving params."""

@@ -266,3 +266,96 @@ class PlanSet:
                 "params (weights were re-quantized/re-compressed/"
                 "re-calibrated) — rebuild with model.plan_set()"
             )
+
+
+# ----------------------------------------------------------------- §13
+# Model-agnostic plan staging. SparseCNN.plan/plan_set and LM.plan are
+# thin compositions over these — any model family stages per-layer
+# closures through a PlanBuilder and inherits fingerprint pinning, tile
+# resolution (one TuneCache parse per build), and bucketed PlanSets.
+
+
+def resolve_tune_cache(tune: str, cache):
+    """Parse the on-disk autotune cache once per plan build (``tune='off'``
+    skips it). Idempotent: an already-parsed ``TuneCache`` passes through,
+    so nested builders (plan_set → plan per bucket) share one parse."""
+    if tune == "off":
+        return cache
+    from repro.kernels.autotune import TuneCache
+
+    if not isinstance(cache, TuneCache):
+        cache = TuneCache(cache)
+    return cache
+
+
+class PlanBuilder:
+    """Collects staged serving layers into an immutable :class:`ModelPlan`.
+
+    One builder per (model, params, batch): the params fingerprint is
+    taken at construction, tuning knobs are normalized once
+    (:func:`resolve_tune_cache`), and every :meth:`stage` call receives
+    the shared ``tune/cache/top_k/reps`` keywords so per-layer
+    ``make_plan`` implementations resolve tiles against the same cache.
+    Layers that stage plain closures without tile resolution (pooling,
+    norms, whole transformer blocks) use :meth:`raw`.
+    """
+
+    def __init__(self, model: str, params, *, batch: Optional[int] = None,
+                 tune: str = "cache", cache=None, top_k: int = 4,
+                 reps: int = 3):
+        self.model = model
+        self.batch = batch
+        self.fingerprint = params_fingerprint(params)
+        self.tune = tune
+        self.cache = resolve_tune_cache(tune, cache)
+        self.top_k = top_k
+        self.reps = reps
+        self._stages: list = []
+
+    @property
+    def tune_kw(self) -> dict:
+        """The shared tuning keywords every ``make_plan`` receives."""
+        return dict(tune=self.tune, cache=self.cache, top_k=self.top_k,
+                    reps=self.reps)
+
+    def stage(self, name: str, kind: str, make_plan: Callable, *args, **kw):
+        """Stage one layer via its ``make_plan(*args, **kw, **tune_kw)``
+        → ``(run, tiles)`` contract. Returns self (chainable)."""
+        run, tiles = make_plan(*args, **kw, **self.tune_kw)
+        self._stages.append(
+            LayerPlan(name, kind, tuple(sorted(tiles.items())), run)
+        )
+        return self
+
+    def raw(self, name: str, kind: str, run: Callable):
+        """Stage a tile-free closure (weights already frozen in)."""
+        self._stages.append(LayerPlan(name, kind, (), run))
+        return self
+
+    def build(self) -> ModelPlan:
+        if not self._stages:
+            raise ValueError("PlanBuilder has no stages")
+        return ModelPlan(self.model, self.fingerprint, tuple(self._stages),
+                         self.batch)
+
+
+def build_plan_set(model: str, params, plan_for_batch: Callable[[int], ModelPlan],
+                   *, max_batch: Optional[int] = None, buckets=None,
+                   dp: int = 1) -> PlanSet:
+    """Bucket-ladder :class:`PlanSet` from a per-batch plan factory.
+
+    Derives/validates the ladder (``make_buckets`` powers of two when
+    ``buckets`` is None; every bucket a positive multiple of ``dp``),
+    builds one plan per bucket via ``plan_for_batch(b)``, and pins the
+    set to ``params``. Model families supply only the factory.
+    """
+    if buckets is None:
+        if max_batch is None:
+            raise ValueError("plan set needs max_batch or explicit buckets")
+        buckets = make_buckets(max_batch, dp=dp)
+    buckets = tuple(sorted({int(b) for b in buckets}))
+    bad = [b for b in buckets if b < 1 or b % dp]
+    if bad:
+        raise ValueError(f"buckets {bad} not positive multiples of dp={dp}")
+    plans = {b: plan_for_batch(b) for b in buckets}
+    return PlanSet(model, params_fingerprint(params), buckets, plans)

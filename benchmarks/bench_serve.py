@@ -2,7 +2,7 @@
 
 Drives the §11 queue → bucketer → frozen-plan pipeline with a load
 generator and writes ``BENCH_serve.json`` (a CI artifact gated by
-``benchmarks/check_regression.py``). Four claims, all measured:
+``benchmarks/check_regression.py``). Six claims, all measured:
 
 1. **Bit-exactness**: bucketed/padded serving of every ragged batch size
    (including one larger than the biggest bucket, which chunks) equals
@@ -21,6 +21,15 @@ generator and writes ``BENCH_serve.json`` (a CI artifact gated by
    instead of hardcoding microseconds (what it catches is the failure
    mode that matters: a retrace or batching regression inflating tail
    latency by orders of magnitude).
+5. **Blast radius** (DESIGN.md §14): a full co-batch carrying a
+   raise-poison and a nan-poison completes every innocent request
+   bit-identical to a fault-free per-request serve; exactly the poisons
+   get their typed exceptions; bisect isolation adds zero retraces.
+6. **Overload**: 2x measured capacity into a bounded queue with reject
+   shedding — sheds with a measured retry-after, admitted p99 stays
+   within the (now exactly known: the admission cap) depth bound,
+   goodput holds above ``chaos_goodput_floor`` x capacity, and the
+   ``completed+rejected+failed+expired == offered`` books balance.
 
 Offered load is auto-picked at ~25% of measured capacity (conservative:
 on the CPU smoke model, thread/GIL overhead per dispatch is comparable
@@ -44,8 +53,9 @@ import numpy as np
 
 from repro.kernels import core
 from repro.kernels.autotune import interleaved_medians
-from repro.launch.server import CNNServer, auto_rate, burst_arrivals, \
-    poisson_arrivals
+from repro.launch.faults import FaultInjected, FaultInjector
+from repro.launch.server import CNNServer, NumericalFault, Overloaded, \
+    auto_rate, burst_arrivals, poisson_arrivals
 from repro.xla_utils import median_time_us
 
 OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
@@ -56,6 +66,7 @@ _BASELINES = json.loads(
 )
 PLAN_MARGIN = _BASELINES["serve_plan_margin"]   # plan vs jitted-unplanned
 P99_MARGIN = _BASELINES["serve_p99_margin"]     # p99 vs self-calibrated bound
+GOODPUT_FLOOR = _BASELINES["chaos_goodput_floor"]  # overload goodput/capacity
 
 
 def _drive(server, arrivals, xpool, sizes):
@@ -167,8 +178,149 @@ def run(report, smoke: bool = True):
                f"sustained, {s['batches']} batches {s['bucket_counts']}, "
                f"0 retraces after warmup")
 
+    # --- 5. chaos: poison in a full co-batch, innocents survive ---------
+    results["chaos"] = _chaos(report, plan_set, xpool, sample_shape,
+                              max_batch, max_wait_ms)
+
+    # --- 6. overload: 2x capacity offered, bounded queue sheds ----------
+    results["overload"] = _overload(report, plan_set, xpool, sample_shape,
+                                    max_batch, max_wait_ms, unit_us,
+                                    smoke=smoke)
+
     OUT_PATH.write_text(json.dumps(results, indent=2))
     report("serve/json", 0.0, f"wrote {OUT_PATH.name}")
+
+
+def _chaos(report, plan_set, xpool, sample_shape, max_batch, max_wait_ms):
+    """DESIGN.md §14 blast-radius gate: a slow plug request holds the
+    dispatcher while a full ``max_batch`` co-batch queues up behind it,
+    containing one raise-poison (plan exception at dispatch) and one
+    nan-poison (NaN logits past the datapath). The bisect re-dispatch
+    must complete every innocent **bit-identical** to a fault-free
+    per-request serve, typed-fail exactly the two poisons, and add zero
+    retraces (bisect halves land on already-warmed buckets)."""
+    pool = np.asarray(xpool)
+    inj = FaultInjector(slow_s=0.05)
+    reqs = [pool[i : i + 1] for i in range(1 + max_batch)]  # plug + batch
+    poison_raise = 1 + 2          # index 2 of the co-batch
+    poison_nan = 1 + max_batch - 3
+    inj.poison(reqs[poison_raise], "raise")
+    inj.poison(reqs[poison_nan], "nan")
+    # fault-free reference, served per-request outside the chaos server
+    ref = {i: np.asarray(plan_set.plans[1].serve(r))
+           for i, r in enumerate(reqs)
+           if i not in (poison_raise, poison_nan)}
+
+    server = CNNServer(plan_set, max_wait_ms=max_wait_ms, faults=inj)
+    t0 = time.monotonic()
+    with server:
+        server.warmup(sample_shape)
+        futures = [server.submit(reqs[0])]
+        time.sleep(2 * max_wait_ms / 1e3)  # plug dispatches alone, slowly
+        futures += [server.submit(r) for r in reqs[1:]]
+        outcomes = {}
+        for i, f in enumerate(futures):
+            try:
+                outcomes[i] = np.asarray(f.result(timeout=60))
+            except (FaultInjected, NumericalFault) as e:
+                outcomes[i] = e
+    elapsed = time.monotonic() - t0
+    server.stats.assert_accounting()
+
+    survival = sum(
+        1 for i in ref
+        if isinstance(outcomes[i], np.ndarray)
+        and np.array_equal(outcomes[i], ref[i])
+    ) / len(ref)
+    poison_typed = (isinstance(outcomes[poison_raise], FaultInjected)
+                    and isinstance(outcomes[poison_nan], NumericalFault))
+    retraces = server.retraces_after_warmup
+    s = server.stats.summary()
+    chaos = {
+        "innocent_survival": survival,       # bit-identical completions
+        "poison_typed": bool(poison_typed),  # exactly the poisons, typed
+        "retraces_after_warmup": retraces,
+        "accounting_ok": bool(s["accounting_ok"]),
+        "goodput_rps": round(s["completed"] / max(elapsed, 1e-9), 2),
+        "faults_fired": inj.faults_fired,
+        "batches": s["batches"],
+    }
+    assert survival == 1.0, f"innocent survival {survival} (want 1.0)"
+    assert poison_typed, {i: type(o).__name__ for i, o in outcomes.items()}
+    assert retraces == 0, f"chaos bisect retraced {retraces}x"
+    report("serve/chaos", 0.0,
+           f"{len(ref)}/{len(ref)} innocents bit-identical beside 2 poisons "
+           f"(bisect, {s['batches']} dispatches, 0 retraces)")
+    return chaos
+
+
+def _overload(report, plan_set, xpool, sample_shape, max_batch, max_wait_ms,
+              unit_us, *, smoke):
+    """DESIGN.md §14 overload gate: offer 2x measured capacity into a
+    bounded queue (``2 x max_batch``) with reject shedding. The server
+    must shed (``Overloaded`` with a measured retry-after), keep the
+    admitted requests' p99 under the self-calibrated bound (queue depth
+    is now *known*: the admission cap), balance the books exactly, and
+    sustain goodput above the committed floor fraction of capacity."""
+    pool = np.asarray(xpool)
+    cap_rps, _ = auto_rate(plan_set, sample_shape, utilization=1.0)
+    rate = 2.0 * cap_rps
+    n_req = 96 if smoke else 384
+    max_queue = 2 * max_batch
+    arrivals = poisson_arrivals(rate, n_req, seed=13)
+    server = CNNServer(plan_set, max_wait_ms=max_wait_ms,
+                       max_queue=max_queue, shed="reject")
+    shed = 0
+    retry_after = 0.0
+    t0 = time.monotonic()
+    with server:
+        server.warmup(sample_shape)
+        futures = []
+        for i, t_arr in enumerate(arrivals):
+            lag = t_arr - (time.monotonic() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            try:
+                futures.append(server.submit(pool[i % pool.shape[0]][None]))
+            except Overloaded as e:
+                shed += 1
+                retry_after = e.retry_after_s
+        timeout_s = server.request_timeout_s(floor_s=60.0)
+        for f in futures:
+            f.result(timeout=timeout_s)
+        elapsed = time.monotonic() - t0
+    server.stats.assert_accounting()
+    s = server.stats.summary()
+    assert s["rejected"] == shed and shed > 0, \
+        f"2x capacity never shed (rejected={s['rejected']})"
+    assert retry_after > 0.0, "Overloaded carried no measured retry-after"
+    # queue depth is the admission cap: the p99 bound stops being a guess
+    depth = -(-max_queue // max_batch)
+    bound_us = P99_MARGIN * (max_wait_ms * 1e3 + (depth + 2) * unit_us)
+    assert s["p99_us"] <= bound_us, (s["p99_us"], bound_us)
+    goodput = s["completed"] / max(elapsed, 1e-9)
+    floor = GOODPUT_FLOOR * cap_rps
+    assert goodput >= floor, f"goodput {goodput:.1f} < floor {floor:.1f} rps"
+    over = {
+        "offered_rps": round(rate, 2),
+        "capacity_rps": round(cap_rps, 2),
+        "goodput_rps": round(goodput, 2),
+        "shed_rate": s["shed_rate"],
+        "rejected": s["rejected"],
+        "completed": s["completed"],
+        "offered": s["offered"],
+        "retry_after_ms": round(retry_after * 1e3, 2),
+        "p99_us": s["p99_us"],
+        "p99_bound_us": round(bound_us, 1),
+        "accounting_ok": bool(s["accounting_ok"]),
+        "retraces_after_warmup": server.retraces_after_warmup,
+    }
+    report("serve/overload", s["p99_us"],
+           f"2x capacity: shed {s['shed_rate']:.2f}, goodput "
+           f"{goodput:.0f}/{cap_rps:.0f} rps capacity, p99 within bound, "
+           f"books balanced {s['completed']}+{s['rejected']}+"
+           f"{s['failed']}+{s['expired']}=={s['offered']}")
+    return over
 
 
 if __name__ == "__main__":

@@ -38,7 +38,15 @@ p99 latency must stay under its self-calibrated bound
 (``serve_p99_margin × (max_wait + (queue depth + 2) × measured bucket
 time)`` — host-speed-relative, so the gate catches order-of-magnitude
 tail-latency regressions without hardcoding microseconds). Bucketed
-serving must also have been bit-identical to per-request serving.
+serving must also have been bit-identical to per-request serving. The
+§14 robustness scenarios in the same artifact are gated by
+``check_chaos``: blast-radius isolation (innocent survival exactly 1.0,
+typed poison failures, zero bisect retraces), overload shedding
+(``shed_rate > 0`` at 2x capacity, admitted p99 within the bounded-queue
+bound), the ``completed+rejected+failed+expired == offered`` accounting
+identity, and a goodput floor of ``chaos_goodput_floor`` x measured
+capacity (both sides measured in the same run — noise-aware without a
+separate margin).
 
 ``BENCH_lm.json`` gates the §13 LM datapath: compressed projection
 GEMMs must not lose to the dense matmul the pre-PR-8 ``apply_linear``
@@ -100,6 +108,15 @@ SCHEMAS = {
         "plan_us": "num",
         "unplanned_jit_us": "num",
         "bit_identical": bool,
+        "chaos.innocent_survival": "frac",
+        "chaos.poison_typed": bool,
+        "chaos.accounting_ok": bool,
+        "overload.goodput_rps": "num",
+        "overload.capacity_rps": "num",
+        "overload.shed_rate": "frac",
+        "overload.accounting_ok": bool,
+        "overload.p99_us": "num",
+        "overload.p99_bound_us": "num",
     },
     "BENCH_lm.json": {
         "gemms[].name": str,
@@ -269,6 +286,55 @@ def check_serve() -> list:
     return errors
 
 
+def check_chaos() -> list:
+    """Gate the §14 robustness scenarios recorded in BENCH_serve.json:
+    blast-radius isolation (every innocent in a poisoned co-batch must
+    have completed bit-identical — survival exactly 1.0 — with the
+    poisons typed-failed and zero bisect retraces) and overload shedding
+    (books balanced, shed under 2x capacity, admitted p99 within its
+    self-calibrated bound, goodput above ``chaos_goodput_floor`` x
+    measured capacity — noise-aware by construction: both sides of the
+    ratio are measured on the same host in the same run)."""
+    errors = []
+    path = ROOT / "BENCH_serve.json"
+    if not path.exists():
+        return []  # check_serve already reports the missing artifact
+    data = json.loads(path.read_text())
+    chaos, over = data.get("chaos"), data.get("overload")
+    if not chaos or not over:
+        return ["serve: chaos/overload scenarios missing from "
+                f"{path.name} (stale artifact? rerun benchmarks)"]
+    if chaos.get("innocent_survival") != 1.0:
+        errors.append(
+            f"chaos: innocent survival {chaos.get('innocent_survival')} != "
+            "1.0 — a poisoned co-batch damaged innocent requests")
+    if not chaos.get("poison_typed", False):
+        errors.append("chaos: poison futures did not fail with their typed "
+                      "exceptions (FaultInjected / NumericalFault)")
+    if chaos.get("retraces_after_warmup", 1) != 0:
+        errors.append(f"chaos: bisect isolation retraced "
+                      f"{chaos.get('retraces_after_warmup')}x (halves must "
+                      "land on warmed buckets)")
+    for name, d in (("chaos", chaos), ("overload", over)):
+        if not d.get("accounting_ok", False):
+            errors.append(f"{name}: completed+rejected+failed+expired != "
+                          "offered (requests leaked)")
+    if not over.get("shed_rate", 0) > 0:
+        errors.append("overload: 2x capacity offered but nothing shed "
+                      "(admission control inert)")
+    p99, bound = over.get("p99_us"), over.get("p99_bound_us")
+    if p99 is not None and bound is not None and p99 > bound:
+        errors.append(f"overload: admitted p99 {p99}us > bounded-queue "
+                      f"bound {bound}us")
+    floor = _BASE["chaos_goodput_floor"] * over.get("capacity_rps", 0)
+    if over.get("goodput_rps", 0) < floor:
+        errors.append(
+            f"overload: goodput {over.get('goodput_rps')} rps < "
+            f"{_BASE['chaos_goodput_floor']} x capacity "
+            f"{over.get('capacity_rps')} rps — shedding collapsed service")
+    return errors
+
+
 def check_lm() -> list:
     errors = []
     path = ROOT / "BENCH_lm.json"
@@ -309,7 +375,8 @@ def check_lm() -> list:
 
 
 def main() -> int:
-    errors = check_fused() + check_autotune() + check_serve() + check_lm()
+    errors = check_fused() + check_autotune() + check_serve() \
+        + check_chaos() + check_lm()
     for e in errors:
         print(f"REGRESSION: {e}", file=sys.stderr)
     if not errors:

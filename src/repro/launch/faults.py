@@ -1,0 +1,160 @@
+"""Deterministic fault injection for the serving tier (DESIGN.md §14).
+
+The chaos suite (``tests/test_faults.py``, ``benchmarks/bench_serve.py``)
+never monkeypatches server internals: :class:`FaultInjector` is installed
+through the three hook seams ``CNNServer`` exposes via its ``faults=``
+parameter, and every injector is deterministic — poison targets are
+registered by content digest, slow/kill faults fire on configured
+dispatch ordinals — so a chaos run replays exactly.
+
+Hook seams (called by the dispatcher thread):
+
+- ``on_tick(n_items)`` — once per dispatcher loop iteration that has
+  work to process, *before* any batching. Raising here simulates a
+  dispatcher **crash** (not a dispatch error): the server's supervision
+  must fail every pending future with ``ServerCrashed``.
+- ``pre_dispatch(pendings)`` — before a batch is assembled. Raising
+  :class:`FaultInjected` here simulates a **plan exception**; because the
+  server re-runs the hook on every bisected sub-batch, a registered
+  poison request re-raises all the way down to its lone dispatch, which
+  is exactly how a real deterministic poison input behaves.
+- ``pre_serve(pendings, xb) -> xb`` — after host assembly, before the
+  bucket dispatch. This seam injects **slow plans** (``slow_s`` sleep,
+  driving deadline/overload scenarios).
+- ``post_serve(pendings, y) -> y`` — after the bucket dispatch, before
+  per-request scatter. This seam injects **NaN activations** into the
+  logits rows of nan-poisoned requests. It has to live *past* the
+  datapath: NaN request *inputs* are already rejected at admission, and
+  a NaN smuggled into the batch would be clipped finite by the int8
+  requantize chain — so a numeric fault is simulated where one would
+  surface, and only the server's per-request output check can isolate
+  it.
+
+:func:`bad_input` builds the malformed *request* side of the suite:
+wrong-shape / wrong-dtype / non-finite arrays that admission validation
+(``validate_request``) must reject alone.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from typing import List, Optional
+
+import numpy as np
+
+
+class FaultInjected(RuntimeError):
+    """The typed error every injector raises — chaos tests assert that
+    exactly the poisoned future carries exactly this."""
+
+
+def bad_input(kind: str, sample_shape, *, dtype=np.float32, n: int = 1,
+              seed: int = 0) -> np.ndarray:
+    """A deterministic malformed request for admission-validation tests.
+
+    ``kind``: ``'shape'`` (one trailing dim off by one), ``'rank'``
+    (missing a dim), ``'dtype'`` (float64 instead of the spec dtype),
+    ``'nan'`` / ``'inf'`` (spec-shaped but non-finite). All are built
+    from a seeded RNG so reruns submit byte-identical poison.
+    """
+    rng = np.random.default_rng(seed)
+    shape = (n,) + tuple(sample_shape)
+    if kind == "shape":
+        shape = shape[:-1] + (shape[-1] + 1,)
+        return rng.standard_normal(shape).astype(dtype)
+    if kind == "rank":
+        return rng.standard_normal(shape[:-1]).astype(dtype)
+    if kind == "dtype":
+        return rng.standard_normal(shape).astype(
+            np.float64 if np.dtype(dtype) != np.float64 else np.float32)
+    if kind in ("nan", "inf"):
+        x = rng.standard_normal(shape).astype(dtype)
+        x[tuple(0 for _ in shape)] = np.nan if kind == "nan" else np.inf
+        return x
+    raise ValueError(f"unknown bad_input kind {kind!r}")
+
+
+def _digest(x) -> str:
+    a = np.ascontiguousarray(np.asarray(x))
+    h = hashlib.sha1()
+    h.update(str(a.shape).encode())
+    h.update(str(a.dtype).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+class FaultInjector:
+    """Deterministic hook bundle for ``CNNServer(faults=...)``.
+
+    >>> inj = FaultInjector(slow_s=0.05)
+    >>> poison = inj.poison(xpool[2:3])           # dispatch-time raise
+    >>> nanpoison = inj.poison(xpool[3:4], mode="nan")  # NaN activations
+    >>> srv = CNNServer(plan_set, faults=inj)
+
+    Parameters
+    ----------
+    slow_s:
+        Sleep injected into every ``pre_serve`` (a uniformly slow plan —
+        drives deadline-expiry and overload scenarios).
+    kill_after_dispatches:
+        After this many dispatches have run, the next dispatcher tick
+        with pending work raises (a dispatcher kill, exercising
+        ``ServerCrashed`` supervision). ``None`` disables.
+    """
+
+    def __init__(self, *, slow_s: float = 0.0,
+                 kill_after_dispatches: Optional[int] = None):
+        self.slow_s = float(slow_s)
+        self.kill_after_dispatches = kill_after_dispatches
+        self.dispatches = 0          # pre_serve invocations observed
+        self.faults_fired = 0        # poison/kill raises delivered
+        self._poison = {}            # content digest -> 'raise' | 'nan'
+
+    # ------------------------------------------------------ poison API
+    def poison(self, x, mode: str = "raise"):
+        """Register ``x`` (one request's array) as poison and return it
+        unchanged. ``mode='raise'`` makes any batch containing it fail at
+        ``pre_dispatch`` (a plan exception); ``mode='nan'`` corrupts its
+        logits rows with NaN at ``post_serve`` (NaN activations — past
+        admission and the int8 datapath, so only the server's
+        per-request output check can isolate it)."""
+        if mode not in ("raise", "nan"):
+            raise ValueError(f"mode must be 'raise' or 'nan', got {mode!r}")
+        self._poison[_digest(x)] = mode
+        return x
+
+    def is_poisoned(self, x, mode: str = "raise") -> bool:
+        return self._poison.get(_digest(x)) == mode
+
+    # ------------------------------------------------- server hook seams
+    def on_tick(self, n_items: int) -> None:
+        if (self.kill_after_dispatches is not None
+                and self.dispatches >= self.kill_after_dispatches
+                and n_items > 0):
+            self.faults_fired += 1
+            raise FaultInjected(
+                f"dispatcher killed after {self.dispatches} dispatches")
+
+    def pre_dispatch(self, pendings: List) -> None:
+        hit = [p for p in pendings if self.is_poisoned(p.x, "raise")]
+        if hit:
+            self.faults_fired += 1
+            raise FaultInjected(
+                f"plan exception: {len(hit)} poisoned request(s) in a "
+                f"batch of {len(pendings)}")
+
+    def pre_serve(self, pendings: List, xb: np.ndarray) -> np.ndarray:
+        self.dispatches += 1
+        if self.slow_s > 0:
+            time.sleep(self.slow_s)
+        return xb
+
+    def post_serve(self, pendings: List, y: np.ndarray) -> np.ndarray:
+        off = 0
+        for p in pendings:
+            if self.is_poisoned(p.x, "nan"):
+                self.faults_fired += 1
+                y = np.array(y)  # copy-on-poison: never mutate shared output
+                y[off : off + p.n] = np.nan
+            off += p.n
+        return y

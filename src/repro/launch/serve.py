@@ -133,13 +133,21 @@ def serve_cnn(args):
 
 
 def serve_cnn_continuous(args, model, qparams, xpool):
-    """The §11 serving tier under a Poisson load (``--server``)."""
-    from repro.launch.server import CNNServer, auto_rate, poisson_arrivals
+    """The §11 serving tier under a Poisson load (``--server``), with the
+    §14 robustness knobs: bounded admission (``--max-queue`` /
+    ``--shed``), per-request deadlines (``--deadline-ms``), and a
+    client-side timeout derived from the server's own deadline/max-wait
+    config + measured bucket time (no hardcoded constant). Per-request
+    failures (shed, expired, faulted) are tallied into the summary
+    instead of crashing the run on the first bad future."""
+    from repro.launch.server import CNNServer, Overloaded, auto_rate, \
+        poisson_arrivals
 
     sample_shape = xpool.shape[1:]
     plan_set = model.plan_set(qparams, max_batch=args.max_batch, tune=args.tune)
     print(f"[serve] plan set: buckets {plan_set.buckets} ({args.tune}), "
-          f"max-wait {args.max_wait_ms}ms")
+          f"max-wait {args.max_wait_ms}ms, max-queue {args.max_queue} "
+          f"({args.shed})")
     rate = args.rate
     if rate is None:
         rate, bucket_us = auto_rate(plan_set, sample_shape)
@@ -151,7 +159,10 @@ def serve_cnn_continuous(args, model, qparams, xpool):
     import numpy as np
 
     pool = np.asarray(xpool)
-    srv = CNNServer(plan_set, max_wait_ms=args.max_wait_ms)
+    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms else None
+    srv = CNNServer(plan_set, max_wait_ms=args.max_wait_ms,
+                    max_queue=args.max_queue, shed=args.shed)
+    results, failures = [], {}
     with srv:
         srv.warmup(sample_shape)
         futures = []
@@ -160,14 +171,42 @@ def serve_cnn_continuous(args, model, qparams, xpool):
             lag = t_arr - (time.monotonic() - t0)
             if lag > 0:
                 time.sleep(lag)
-            futures.append(srv.submit(pool[i % pool.shape[0]][None]))
-        results = [f.result(timeout=120) for f in futures]
+            try:
+                futures.append(
+                    srv.submit(pool[i % pool.shape[0]][None],
+                               deadline_s=deadline_s))
+            except Overloaded as e:  # shed — the run keeps going
+                failures["Overloaded"] = failures.get("Overloaded", 0) + 1
+                futures.append(None)
+                if failures["Overloaded"] == 1:
+                    print(f"[serve] shedding (retry-after "
+                          f"{e.retry_after_s * 1e3:.1f}ms)")
+        # derived from max_wait + backlog x measured bucket time —
+        # replaces the old hardcoded f.result(timeout=120)
+        timeout_s = srv.request_timeout_s()
+        for f in futures:
+            if f is None:
+                results.append(None)
+                continue
+            try:
+                results.append(f.result(timeout=timeout_s))
+            except Exception as e:  # noqa: BLE001 — tally, don't crash the run
+                failures[type(e).__name__] = failures.get(type(e).__name__, 0) + 1
+                results.append(None)
+    srv.stats.assert_accounting()
     s = srv.stats.summary()
     print(f"[serve] {s['completed']}/{s['offered']} requests in {s['batches']} "
           f"batches {s['bucket_counts']} (padded_frac {s['padded_frac']})")
+    if failures:
+        tally = ", ".join(f"{k} x{v}" for k, v in sorted(failures.items()))
+        print(f"[serve] per-request failures: {tally} "
+              f"(shed_rate {s['shed_rate']}, expired {s['expired']}, "
+              f"failed {s['failed']})")
     print(f"[serve] p50 {s['p50_us']:.0f}us  p99 {s['p99_us']:.0f}us  "
-          f"throughput {s['throughput_rps']:.1f} rps  "
-          f"retraces after warmup: {srv.retraces_after_warmup}")
+          f"goodput {s['throughput_rps']:.1f} rps  "
+          f"client timeout {timeout_s:.1f}s (derived)  "
+          f"retraces after warmup: {srv.retraces_after_warmup}  "
+          f"health: {srv.health()['status']}")
     return results
 
 
@@ -190,6 +229,12 @@ def serve_lm_plan(args):
     plan = model.plan(qparams, batch=args.batch, seq=args.prompt_len,
                       tune=args.tune)
     print(f"[serve] frozen plan: {len(plan.layers)} stages ({args.tune})")
+    # the §14 admission check guards the LM path too: token batches are
+    # validated against the plan's sample spec before any dispatch
+    from repro.launch.server import validate_request
+
+    for row in tokens:
+        validate_request(row[None], plan.sample_spec)
     ref = jax.jit(lambda t: model.forward(qparams, {"tokens": t}))
     bit = bool((plan(tokens) == ref(tokens)).all())
     print(f"[serve] plan vs unplanned forward bit-identical: {bit}")
@@ -234,6 +279,17 @@ def main(argv=None):
     ap.add_argument("--rate", type=float, default=None,
                     help="server: offered load in requests/s "
                          "(default: ~50%% of measured capacity)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="server: admission bound — pending requests beyond "
+                         "this are shed per --shed (default: unbounded)")
+    ap.add_argument("--shed", choices=("reject", "block"), default="reject",
+                    help="server: overload policy at --max-queue — reject "
+                         "(typed Overloaded with retry-after) or block "
+                         "(backpressure the submitter)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="server: per-request deadline; requests that "
+                         "cannot be served in time fail with "
+                         "DeadlineExceeded instead of wasting a dispatch")
     args = ap.parse_args(argv)
 
     if args.arch in CNN_ARCHS:

@@ -1,6 +1,7 @@
-"""Continuous-batching CNN serving tier (DESIGN.md §11).
+"""Continuous-batching CNN serving tier (DESIGN.md §11, §14).
 
-The pipeline is **queue → bucketer → (sharded) frozen-plan dispatch**:
+The pipeline is **admission → queue → bucketer → (sharded) frozen-plan
+dispatch**:
 
 - :class:`CNNServer` owns a thread-safe request queue. ``submit(x)``
   (``x``: ``(n, H, W, C)``, any ``n ≥ 1``) returns a
@@ -26,6 +27,44 @@ The pipeline is **queue → bucketer → (sharded) frozen-plan dispatch**:
   the padded batch always shards evenly and each device runs the same
   staged program on its shard.
 
+The robustness layer (DESIGN.md §14) makes the tier degrade gracefully
+instead of being fast only on the happy path:
+
+- **Admission control**: ``max_queue`` bounds in-system samples. Over
+  it, ``shed='reject'`` raises :class:`Overloaded` (carrying a
+  retry-after derived from the *measured* bucket service time) and
+  ``shed='block'`` applies backpressure. Every request is validated
+  against the plan set's per-sample spec (shape / dtype / finiteness)
+  at ``submit`` — a malformed request is rejected alone
+  (:class:`InvalidRequest`) instead of poisoning a co-batch.
+- **Deadlines**: ``submit(x, deadline_s=...)``. The dispatcher subtracts
+  the measured service estimate when computing flush deadlines (so a
+  tight-deadline request flushes early enough to make it) and fails
+  already-expired requests with :class:`DeadlineExceeded` *before*
+  wasting a bucket dispatch on them.
+- **Blast-radius isolation**: when a batch dispatch raises, the batch is
+  **bisected** — each half re-dispatches independently (each half pads
+  to an already-warmed bucket, so isolation adds zero retraces) until
+  exactly the poison request carries the exception and every innocent
+  co-batched request completes with logits bit-identical to a
+  fault-free run. Non-finite logits fail only the offending request
+  (:class:`NumericalFault`), not its batch.
+- **Supervision**: a dispatcher *crash* (not just a dispatch error)
+  fails every pending future with :class:`ServerCrashed` instead of
+  stranding waiters; :meth:`CNNServer.health` reports
+  ready/degraded/stopped; :meth:`CNNServer.stop` takes a drain
+  ``timeout_s``; restarting after ``stop()`` resets the run's stats so
+  the accounting identity and the zero-retrace snapshot stay valid.
+- **Fault hooks**: ``faults=`` installs a deterministic injector
+  (:class:`repro.launch.faults.FaultInjector`) at four seams —
+  ``on_tick`` (dispatcher kill), ``pre_dispatch`` (plan exception),
+  ``pre_serve`` (slow plan), ``post_serve`` (NaN activations) — so the
+  chaos suite never monkeypatches internals.
+
+:class:`ServerStats` closes the books on every offered sample:
+``completed + rejected + failed + expired == offered`` is an asserted
+invariant once the server has stopped.
+
 The load-generator helpers (:func:`poisson_arrivals`,
 :func:`burst_arrivals`) live here too so ``benchmarks/bench_serve.py``
 and ``repro.launch.serve --server`` drive identical traffic shapes.
@@ -42,6 +81,44 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+# ------------------------------------------------------- typed failures
+class ServeError(RuntimeError):
+    """Base of every typed serving-tier failure (DESIGN.md §14)."""
+
+
+class InvalidRequest(ServeError, ValueError):
+    """Rejected at admission: the request does not match the plan's
+    per-sample spec (shape / dtype / finiteness) or is structurally
+    malformed. Fails only the offending request — it never reaches a
+    co-batch."""
+
+
+class Overloaded(ServeError):
+    """Shed at admission: the bounded queue is full (``shed='reject'``).
+
+    ``retry_after_s`` estimates when capacity frees up, derived from the
+    measured bucket service time and the current backlog depth."""
+
+    def __init__(self, msg: str, *, retry_after_s: float):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
+
+
+class DeadlineExceeded(ServeError):
+    """The request's ``deadline_s`` passed while it was still queued; it
+    was failed before wasting a bucket dispatch."""
+
+
+class NumericalFault(ServeError):
+    """This request's logits came back non-finite; co-batched requests
+    were unaffected (batch rows are independent)."""
+
+
+class ServerCrashed(ServeError):
+    """The dispatcher thread itself died; pending futures are failed
+    with this instead of stranding their waiters."""
 
 
 # ------------------------------------------------------------- load gen
@@ -65,15 +142,41 @@ def burst_arrivals(n: int, *, burst: int, gap_s: float,
     return np.asarray([start + (i // burst) * gap_s for i in range(n)])
 
 
+# ----------------------------------------------------------- validation
+def validate_request(x, sample_spec: Tuple[Tuple[int, ...], str],
+                     *, check_finite: bool = True) -> None:
+    """Admission-time request validation against a plan's per-sample spec
+    (``(shape_sans_batch, dtype_name)`` — see ``ModelPlan.sample_spec``).
+
+    Raises :class:`InvalidRequest` on shape or dtype mismatch, and — for
+    floating inputs — on any non-finite value, so a NaN/Inf request is
+    rejected alone instead of poisoning every co-batched request's
+    output. Shared by ``CNNServer.submit`` and the LM plan CLI path.
+    """
+    shape, dtype = sample_spec
+    if tuple(x.shape[1:]) != tuple(shape):
+        raise InvalidRequest(
+            f"request sample shape {tuple(x.shape[1:])} != plan spec "
+            f"{tuple(shape)}")
+    if np.dtype(x.dtype) != np.dtype(dtype):
+        raise InvalidRequest(
+            f"request dtype {np.dtype(x.dtype).name} != plan spec {dtype}")
+    if check_finite and np.issubdtype(np.dtype(dtype), np.floating):
+        if not np.isfinite(np.asarray(x)).all():
+            raise InvalidRequest("request contains non-finite values")
+
+
 # ------------------------------------------------------------ batching
 @dataclasses.dataclass
 class _Pending:
-    """One queued request: its samples, arrival stamp, result future."""
+    """One queued request: its samples, arrival stamp, result future,
+    and (optionally) the absolute monotonic deadline it must meet."""
 
     x: jax.Array
     n: int
     arrival: float
     future: Future
+    deadline: Optional[float] = None
 
 
 class MicroBatcher:
@@ -85,6 +188,13 @@ class MicroBatcher:
     request that would overflow the current batch flushes the batch
     first; a single request larger than ``max_batch`` becomes its own
     batch (``PlanSet.serve`` chunks it at the largest bucket).
+
+    Per-request deadlines tighten the flush time: :meth:`deadline`
+    returns the earlier of the max-wait flush and the tightest pending
+    request deadline *minus the caller's service estimate* — queue wait
+    is subtracted from the budget, so a request with a deadline flushes
+    early enough to still complete in time rather than expiring in the
+    batcher.
     """
 
     def __init__(self, max_batch: int, max_wait_s: float):
@@ -111,14 +221,21 @@ class MicroBatcher:
             out.append(self.take())
         return out
 
-    def deadline(self) -> Optional[float]:
-        """Absolute time the oldest pending request must flush by."""
+    def deadline(self, service_est_s: float = 0.0) -> Optional[float]:
+        """Absolute time the pending set must flush by: oldest arrival +
+        max-wait, tightened by any request deadline less the expected
+        service time (``service_est_s``, the dispatcher's measured
+        bucket-time estimate)."""
         if not self._pending:
             return None
-        return self._pending[0].arrival + self.max_wait_s
+        dl = self._pending[0].arrival + self.max_wait_s
+        for p in self._pending:
+            if p.deadline is not None:
+                dl = min(dl, p.deadline - service_est_s)
+        return dl
 
-    def due(self, now: float) -> bool:
-        dl = self.deadline()
+    def due(self, now: float, service_est_s: float = 0.0) -> bool:
+        dl = self.deadline(service_est_s)
         return dl is not None and now >= dl
 
     def take(self) -> List[_Pending]:
@@ -130,10 +247,28 @@ class MicroBatcher:
 # --------------------------------------------------------------- stats
 @dataclasses.dataclass
 class ServerStats:
-    """Counters a serving run accumulates (read after ``stop()``)."""
+    """Counters a serving run accumulates (read after ``stop()``).
+
+    All request counters are in **samples**. Every offered sample ends
+    in exactly one terminal bucket — the accounting identity
+    ``completed + rejected + failed + expired == submitted`` (asserted
+    by :meth:`assert_accounting` once the server has stopped):
+
+    - ``completed``: served, future resolved with logits.
+    - ``rejected``: shed at admission (:class:`Overloaded` under the
+      ``reject`` policy) or failed validation (:class:`InvalidRequest`).
+    - ``expired``: missed its deadline while queued
+      (:class:`DeadlineExceeded`), failed before any dispatch.
+    - ``failed``: a dispatch/output fault (poison request, plan
+      exception, :class:`NumericalFault`, :class:`ServerCrashed`) or
+      cancelled by a non-draining/timed-out ``stop()``.
+    """
 
     submitted: int = 0
     completed: int = 0
+    rejected: int = 0
+    failed: int = 0
+    expired: int = 0
     batches: int = 0
     served_samples: int = 0
     padded_samples: int = 0
@@ -143,9 +278,25 @@ class ServerStats:
     last_done: Optional[float] = None
     warmup_traces: int = 0
 
+    @property
+    def accounted(self) -> int:
+        return self.completed + self.rejected + self.failed + self.expired
+
+    def accounting_ok(self) -> bool:
+        """The identity every stopped run must satisfy: each offered
+        sample landed in exactly one terminal counter."""
+        return self.accounted == self.submitted
+
+    def assert_accounting(self) -> None:
+        assert self.accounting_ok(), (
+            f"accounting identity violated: completed {self.completed} + "
+            f"rejected {self.rejected} + failed {self.failed} + expired "
+            f"{self.expired} = {self.accounted} != offered {self.submitted}")
+
     def summary(self) -> dict:
-        """p50/p99 latency (µs), sustained throughput (requests/s over
-        first-arrival → last-completion), aggregation shape."""
+        """p50/p99 latency (µs) of completed requests, goodput
+        (requests/s over first-arrival → last-completion), shed rate,
+        terminal counters, aggregation shape."""
         lat_us = np.asarray(self.latencies_s, dtype=np.float64) * 1e6
         span = (
             (self.last_done - self.first_arrival)
@@ -154,11 +305,17 @@ class ServerStats:
         return {
             "offered": self.submitted,
             "completed": self.completed,
+            "rejected": self.rejected,
+            "failed": self.failed,
+            "expired": self.expired,
+            "accounting_ok": self.accounting_ok(),
             "batches": self.batches,
             "p50_us": round(float(np.percentile(lat_us, 50)), 1) if len(lat_us) else None,
             "p99_us": round(float(np.percentile(lat_us, 99)), 1) if len(lat_us) else None,
             "mean_us": round(float(lat_us.mean()), 1) if len(lat_us) else None,
             "throughput_rps": round(self.completed / span, 2) if span > 0 else None,
+            "shed_rate": round(self.rejected / self.submitted, 4)
+            if self.submitted else 0.0,
             "bucket_counts": {str(k): v for k, v in sorted(self.bucket_counts.items())},
             "padded_frac": round(self.padded_samples / self.served_samples, 4)
             if self.served_samples else 0.0,
@@ -173,10 +330,10 @@ class CNNServer:
     """Continuous-batching front end over a frozen :class:`PlanSet`.
 
     >>> plan_set = model.plan_set(qparams, max_batch=8, tune="cache")
-    >>> with CNNServer(plan_set, max_wait_ms=5.0) as srv:
-    ...     srv.warmup((32, 32, 3))
-    ...     fut = srv.submit(x1)          # x1: (1, 32, 32, 3)
-    ...     logits = fut.result()
+    >>> with CNNServer(plan_set, max_wait_ms=5.0, max_queue=64) as srv:
+    ...     srv.warmup()                      # buckets from the plan spec
+    ...     fut = srv.submit(x1, deadline_s=0.2)   # x1: (1, 32, 32, 3)
+    ...     logits = fut.result(timeout=srv.request_timeout_s())
     >>> srv.stats.summary()["p99_us"], srv.retraces_after_warmup  # -> ..., 0
 
     ``mesh=`` turns on data-parallel dispatch: padded buckets are placed
@@ -184,6 +341,15 @@ class CNNServer:
     plan runs (``multi_pod=`` selects the ('pod','data') axes). Build
     the plan set with ``dp=mesh data size`` so every bucket shards
     evenly.
+
+    Robustness knobs (DESIGN.md §14): ``max_queue`` bounds admitted
+    in-system samples (None = unbounded), ``shed`` picks the overload
+    policy (``'reject'`` raises :class:`Overloaded` with a measured
+    retry-after; ``'block'`` backpressures the submitting thread),
+    ``validate`` checks every request against the plan's sample spec at
+    admission, ``check_outputs`` fails individual requests whose logits
+    come back non-finite, and ``faults`` installs a deterministic
+    injector (``repro.launch.faults``) for chaos testing.
 
     The dispatcher blocks each batch to completion before resolving its
     futures, so a request's measured latency (arrival → result ready)
@@ -194,11 +360,23 @@ class CNNServer:
     """
 
     def __init__(self, plan_set, *, max_batch: Optional[int] = None,
-                 max_wait_ms: float = 5.0, mesh=None, multi_pod: bool = False):
+                 max_wait_ms: float = 5.0, mesh=None, multi_pod: bool = False,
+                 max_queue: Optional[int] = None, shed: str = "reject",
+                 validate: bool = True, check_outputs: bool = True,
+                 faults=None):
+        if shed not in ("reject", "block"):
+            raise ValueError(f"shed must be 'reject' or 'block', got {shed!r}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.plan_set = plan_set
         self.max_batch = int(max_batch or plan_set.buckets[-1])
         self.max_wait_s = float(max_wait_ms) / 1e3
+        self.max_queue = max_queue
+        self.shed = shed
         self.stats = ServerStats()
+        self._validate = validate
+        self._check_outputs = check_outputs
+        self._faults = faults
         self._put = None
         if mesh is not None:
             from jax.sharding import NamedSharding
@@ -212,12 +390,41 @@ class CNNServer:
         self._q: _queue.Queue = _queue.Queue()
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
+        self._space = threading.Condition(self._lock)  # blocks shed='block'
+        self._abandon = threading.Event()  # stop(timeout_s=) gave up draining
         self._closed = False
+        self._crashed: Optional[BaseException] = None
+        self._degraded = False          # last dispatch hit a fault
+        self._depth = 0                 # admitted samples not yet resolved
+        self._bucket_time_s: Optional[float] = None  # EMA of serve time
+        self._ran = False
 
     # ------------------------------------------------------- lifecycle
     def start(self) -> "CNNServer":
         if self._thread is not None:
             raise RuntimeError("server already started")
+        if self._ran:
+            # Restart after stop(): stale stats would double-count the
+            # accounting identity and a stale warmup snapshot would
+            # corrupt the zero-retrace contract — reset the run and
+            # re-baseline traces at the plan set's current count (the
+            # buckets stay compiled, so no re-warmup is required).
+            while True:  # stale sentinels (e.g. stop() after a crash)
+                try:
+                    item = self._q.get_nowait()
+                except _queue.Empty:
+                    break
+                if isinstance(item, _Pending):  # can't happen, but never strand
+                    self._cancel(item)
+            self.stats = ServerStats()
+            self.stats.warmup_traces = self.plan_set.trace_count
+            self._batcher = MicroBatcher(self.max_batch, self.max_wait_s)
+            with self._lock:
+                self._crashed = None
+                self._degraded = False
+                self._depth = 0
+        self._ran = True
+        self._abandon.clear()
         self._closed = False
         self._thread = threading.Thread(
             target=self._loop, name="cnn-serve-dispatch", daemon=True
@@ -225,15 +432,21 @@ class CNNServer:
         self._thread.start()
         return self
 
-    def stop(self, *, drain: bool = True) -> None:
+    def stop(self, *, drain: bool = True, timeout_s: Optional[float] = None) -> None:
         """Stop the dispatcher; ``drain=True`` (default) serves whatever
-        is still queued first, so every submitted future resolves."""
+        is still queued first, so every submitted future resolves.
+        ``timeout_s`` bounds the drain: past it, remaining requests are
+        cancelled (their waiters get ``CancelledError``, never a hang)."""
         if self._thread is None:
             return
         with self._lock:
             self._closed = True  # reject new submits racing the sentinel
-        self._q.put((_STOP, drain))
-        self._thread.join()
+            self._q.put((_STOP, drain))
+            self._space.notify_all()  # wake blocked submitters to fail fast
+        self._thread.join(timeout_s)
+        if self._thread.is_alive():
+            self._abandon.set()  # drain loop cancels the rest and exits
+            self._thread.join()
         self._thread = None
 
     def __enter__(self) -> "CNNServer":
@@ -243,11 +456,22 @@ class CNNServer:
         self.stop()
 
     # ------------------------------------------------------- hot path
-    def warmup(self, sample_shape: Sequence[int], dtype=jnp.float32) -> int:
-        """Compile every bucket (through the mesh sharding, when set) and
-        snapshot the trace count — the baseline of the zero-retrace
-        contract (:attr:`retraces_after_warmup`)."""
+    def warmup(self, sample_shape: Optional[Sequence[int]] = None,
+               dtype=jnp.float32) -> int:
+        """Compile every bucket (through the mesh sharding, when set),
+        seed the measured service-time estimate with one timed
+        largest-bucket dispatch, and snapshot the trace count — the
+        baseline of the zero-retrace contract
+        (:attr:`retraces_after_warmup`). ``sample_shape`` defaults to
+        the plan set's own sample spec."""
+        if sample_shape is None and self.plan_set.sample_spec is not None:
+            sample_shape, dtype = self.plan_set.sample_spec
         self.plan_set.warmup(tuple(sample_shape), dtype, put=self._put)
+        cap = self.plan_set.buckets[-1]
+        xb = np.zeros((cap,) + tuple(sample_shape), dtype)
+        t0 = time.monotonic()
+        self.plan_set.serve(xb, put=self._put)  # warmed: no new trace
+        self._note_service_time(time.monotonic() - t0)
         self.stats.warmup_traces = self.plan_set.trace_count
         return self.stats.warmup_traces
 
@@ -255,22 +479,60 @@ class CNNServer:
     def retraces_after_warmup(self) -> int:
         return self.plan_set.trace_count - self.stats.warmup_traces
 
-    def submit(self, x) -> Future:
+    def submit(self, x, *, deadline_s: Optional[float] = None) -> Future:
         """Enqueue one request (``x``: ``(n, ...)`` with ``n ≥ 1``
         samples, numpy preferred — jax inputs are copied to host at
         dispatch); returns the future of its ``(n, num_classes)`` logits
-        as numpy, already computed when the future resolves."""
+        as numpy, already computed when the future resolves.
+
+        ``deadline_s`` (relative seconds) bounds total time-in-system:
+        a request still queued past it fails with
+        :class:`DeadlineExceeded` before any dispatch. Raises
+        :class:`InvalidRequest` on spec validation failure and
+        :class:`Overloaded` when the bounded queue sheds (both typed,
+        both counted against the accounting identity)."""
         if x.ndim < 2 or x.shape[0] < 1:
-            raise ValueError(f"request must be (n, ...) with n >= 1: {x.shape}")
-        fut: Future = Future()
-        p = _Pending(x=x, n=int(x.shape[0]), arrival=time.monotonic(), future=fut)
+            raise InvalidRequest(
+                f"request must be (n, ...) with n >= 1: {x.shape}")
+        n = int(x.shape[0])
+        now = time.monotonic()
         with self._lock:
+            if self._crashed is not None:
+                raise ServerCrashed(
+                    f"server crashed: {self._crashed!r} (restart with start())")
             if self._thread is None or self._closed:
-                raise RuntimeError("server is not running (use `with CNNServer(...)`)")
-            self.stats.submitted += p.n
+                raise RuntimeError(
+                    "server is not running (use `with CNNServer(...)`)")
+            self.stats.submitted += n  # offered, whatever happens next
             if self.stats.first_arrival is None:
-                self.stats.first_arrival = p.arrival
-        self._q.put(p)
+                self.stats.first_arrival = now
+        try:
+            if deadline_s is not None and deadline_s <= 0:
+                raise InvalidRequest(f"deadline_s must be > 0: {deadline_s}")
+            if self._validate and self.plan_set.sample_spec is not None:
+                validate_request(x, self.plan_set.sample_spec)
+        except InvalidRequest:
+            with self._lock:
+                self.stats.rejected += n  # rejected alone — no co-batch harm
+            raise
+        fut: Future = Future()
+        p = _Pending(x=x, n=n, arrival=now, future=fut,
+                     deadline=None if deadline_s is None else now + deadline_s)
+        with self._lock:
+            if self.max_queue is not None and self._depth + n > self.max_queue:
+                if self.shed == "reject":
+                    self.stats.rejected += n
+                    raise Overloaded(
+                        f"queue full ({self._depth}/{self.max_queue} samples)",
+                        retry_after_s=self._retry_after_locked())
+                while (self._depth + n > self.max_queue
+                       and not self._closed and self._crashed is None):
+                    self._space.wait()
+                if self._closed or self._crashed is not None:
+                    self.stats.rejected += n
+                    raise RuntimeError("server stopped while backpressured")
+            self._depth += n
+            self._q.put(p)  # inside the lock: nothing can trail a crash drain
         return fut
 
     def serve_batch(self, x):
@@ -279,7 +541,65 @@ class CNNServer:
         direct callers (tests/bench baselines) share this one path."""
         return self.plan_set.serve(x, put=self._put, on_dispatch=self._record)
 
+    # ---------------------------------------------------------- health
+    def health(self) -> dict:
+        """Liveness snapshot: ``status`` is ``'ready'`` (dispatching,
+        last dispatch clean, queue below capacity), ``'degraded'``
+        (running, but the last dispatch hit a fault or the queue is at
+        capacity and shedding), or ``'stopped'`` (never started, stopped,
+        or crashed — ``crashed`` distinguishes)."""
+        with self._lock:
+            running = (self._thread is not None and not self._closed
+                       and self._crashed is None)
+            at_capacity = (self.max_queue is not None
+                           and self._depth >= self.max_queue)
+            if not running:
+                status = "stopped"
+            elif self._degraded or at_capacity:
+                status = "degraded"
+            else:
+                status = "ready"
+            return {
+                "status": status,
+                "crashed": self._crashed is not None,
+                "queue_depth": self._depth,
+                "max_queue": self.max_queue,
+                "service_estimate_s": self._bucket_time_s,
+            }
+
+    def service_estimate_s(self) -> Optional[float]:
+        """EMA of measured bucket dispatch time (seeded by warmup)."""
+        with self._lock:
+            return self._bucket_time_s
+
+    def request_timeout_s(self, *, slack_buckets: float = 8.0,
+                          floor_s: float = 5.0) -> float:
+        """Client-side ``Future.result`` timeout derived from the
+        server's own config instead of a hardcoded constant: worst-case
+        backlog ahead (``max_queue`` when bounded, else the current
+        depth) in buckets plus ``slack_buckets``, at the measured bucket
+        time, plus the max-wait — floored so an unwarmed server still
+        gets a sane value."""
+        with self._lock:
+            bt = self._bucket_time_s
+            depth = self.max_queue if self.max_queue is not None else self._depth
+        bt = bt if bt is not None else 1.0
+        buckets = -(-max(depth, 0) // self.max_batch) + slack_buckets
+        return max(floor_s, self.max_wait_s + buckets * bt)
+
     # ------------------------------------------------------- internals
+    def _retry_after_locked(self) -> float:
+        """Overload retry-after: backlog depth in buckets × measured
+        bucket time (max-wait floor when nothing is measured yet)."""
+        bt = self._bucket_time_s or self.max_wait_s
+        buckets_ahead = max(1, -(-self._depth // self.max_batch))
+        return self.max_wait_s + buckets_ahead * bt
+
+    def _note_service_time(self, dt: float) -> None:
+        with self._lock:
+            bt = self._bucket_time_s
+            self._bucket_time_s = dt if bt is None else 0.8 * bt + 0.2 * dt
+
     def _record(self, bucket: int, n_real: int) -> None:
         self.stats.batches += 1
         self.stats.served_samples += bucket
@@ -287,10 +607,17 @@ class CNNServer:
         self.stats.bucket_counts[bucket] = self.stats.bucket_counts.get(bucket, 0) + 1
 
     def _loop(self) -> None:
+        try:
+            self._loop_inner()
+        except BaseException as e:  # noqa: BLE001 — supervised: fail futures
+            self._crash(e)
+
+    def _loop_inner(self) -> None:
         stop = None
         while stop is None:
             timeout = None
-            dl = self._batcher.deadline()
+            est = self._bucket_time_s or 0.0
+            dl = self._batcher.deadline(est)
             if dl is not None:
                 timeout = max(0.0, dl - time.monotonic())
             try:
@@ -305,6 +632,13 @@ class CNNServer:
                     items.append(self._q.get_nowait())
                 except _queue.Empty:
                     break
+            if self._faults is not None and items:
+                try:
+                    self._faults.on_tick(len(items))  # dispatcher-kill seam
+                except BaseException:
+                    for it in items:  # keep them failable by _crash
+                        self._q.put(it)
+                    raise
             for item in items:
                 if isinstance(item, tuple) and item[0] is _STOP:
                     # submit() rejects after _closed, so nothing trails
@@ -313,18 +647,45 @@ class CNNServer:
                     continue
                 for batch in self._batcher.add(item):
                     self._dispatch(batch)
-            if stop is None and self._batcher.due(time.monotonic()):
+            if stop is None and self._batcher.due(time.monotonic(), est):
                 self._dispatch(self._batcher.take())
         remainder = self._batcher.take()
         if stop[1]:  # drain: serve what's left so every future resolves
-            if remainder:
-                self._dispatch(remainder)
-        else:
-            for p in remainder:
-                p.future.cancel()
+            while remainder and not self._abandon.is_set():
+                take, nn = [], 0
+                while remainder and (not take
+                                     or nn + remainder[0].n <= self.max_batch):
+                    p = remainder.pop(0)
+                    take.append(p)
+                    nn += p.n
+                self._dispatch(take)
+        for p in remainder:  # non-drain or abandoned drain: cancel
+            self._cancel(p)
 
     def _dispatch(self, batch: List[_Pending]) -> None:
+        """Expire what already missed its deadline — *before* wasting a
+        bucket dispatch — then run the survivors."""
+        if self._abandon.is_set():  # stop(timeout_s=) gave up: cancel, fast
+            for p in batch:
+                self._cancel(p)
+            return
+        now = time.monotonic()
+        live = []
+        for p in batch:
+            if p.deadline is not None and now >= p.deadline:
+                self._fail(p, DeadlineExceeded(
+                    f"deadline missed by {now - p.deadline:.4f}s after "
+                    f"{now - p.arrival:.4f}s queued (never dispatched)"),
+                    kind="expired")
+            else:
+                live.append(p)
+        if live:
+            self._run(live)
+
+    def _run(self, batch: List[_Pending]) -> None:
         try:
+            if self._faults is not None:
+                self._faults.pre_dispatch(batch)  # plan-exception seam
             # Host-side assembly (numpy): concatenating/padding/slicing k
             # request arrays as jax ops would XLA-compile a fresh glue op
             # per (k, sizes) signature mid-traffic — a latency spike the
@@ -333,19 +694,99 @@ class CNNServer:
             # end to end (the only device work is the bucket dispatch).
             xs = [np.asarray(p.x) for p in batch]
             xb = xs[0] if len(xs) == 1 else np.concatenate(xs, axis=0)
+            if self._faults is not None:
+                xb = self._faults.pre_serve(batch, xb)  # slow/NaN seam
+            t0 = time.monotonic()
             y = self.serve_batch(xb)  # numpy in -> numpy out, completed
-        except Exception as e:  # noqa: BLE001 — fail the requests, not the loop
-            for p in batch:
-                p.future.set_exception(e)
+            self._note_service_time(time.monotonic() - t0)
+            if self._faults is not None:
+                y = self._faults.post_serve(batch, y)  # NaN-activation seam
+        except Exception as e:  # noqa: BLE001 — isolate, don't kill the loop
+            if len(batch) == 1:
+                self._fail(p=batch[0], exc=e, kind="failed")
+                return
+            # Blast-radius isolation: bisect. Each half pads up to an
+            # already-warmed bucket, so innocent co-batched requests
+            # complete bit-identically to a fault-free run (batch rows
+            # are independent) with zero new traces, and recursion pins
+            # the exception on exactly the poison request(s).
+            mid = (len(batch) + 1) // 2
+            self._run(batch[:mid])
+            self._run(batch[mid:])
             return
         done = time.monotonic()
         off = 0
+        clean = True
         for p in batch:
-            p.future.set_result(y[off : off + p.n])
+            yp = y[off : off + p.n]
             off += p.n
+            if (self._check_outputs
+                    and np.issubdtype(np.asarray(yp).dtype, np.floating)
+                    and not np.isfinite(yp).all()):
+                # fail only the offending request — its co-batch is fine
+                self._fail(p, NumericalFault(
+                    f"non-finite logits for request of {p.n} sample(s)"),
+                    kind="failed")
+                clean = False
+            else:
+                self._complete(p, yp, done)
+        if clean:
+            with self._lock:
+                self._degraded = False  # a clean batch clears the flag
+
+    # ----------------------------------------------- terminal outcomes
+    def _complete(self, p: _Pending, y, done: float) -> None:
+        with self._lock:
             self.stats.latencies_s.append(done - p.arrival)
             self.stats.completed += p.n
-        self.stats.last_done = done
+            self.stats.last_done = done
+            self._depth -= p.n
+            self._space.notify_all()
+        try:
+            p.future.set_result(y)
+        except Exception:  # cancelled by a racing stop(): already terminal
+            pass
+
+    def _fail(self, p: _Pending, exc: Exception, kind: str) -> None:
+        with self._lock:
+            setattr(self.stats, kind, getattr(self.stats, kind) + p.n)
+            if kind == "failed":
+                self._degraded = True
+            self._depth -= p.n
+            self._space.notify_all()
+        try:
+            p.future.set_exception(exc)
+        except Exception:
+            pass
+
+    def _cancel(self, p: _Pending) -> None:
+        with self._lock:
+            self.stats.failed += p.n  # never served; the identity closes
+            self._depth -= p.n
+            self._space.notify_all()
+        p.future.cancel()  # waiters get CancelledError, never a hang
+
+    def _crash(self, exc: BaseException) -> None:
+        """Supervision: the dispatcher died — fail every pending future
+        with :class:`ServerCrashed` instead of stranding their waiters.
+        ``submit`` raises the same from then on (until a restart)."""
+        with self._lock:
+            self._crashed = exc
+            self._closed = True
+            self._space.notify_all()
+        stranded = self._batcher.take()
+        while True:  # submit() enqueues under the lock: nothing can trail
+            try:
+                item = self._q.get_nowait()
+            except _queue.Empty:
+                break
+            if isinstance(item, tuple) and item[0] is _STOP:
+                continue
+            stranded.append(item)
+        err = ServerCrashed(f"dispatcher crashed: {exc!r}")
+        err.__cause__ = exc if isinstance(exc, Exception) else None
+        for p in stranded:
+            self._fail(p, err, kind="failed")
 
 
 def auto_rate(plan_set, sample_shape: Sequence[int], *, utilization: float = 0.5,

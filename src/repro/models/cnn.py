@@ -278,7 +278,9 @@ class SparseCNN:
         h = w = c.image_size
         n = len(convs)
         pb = PlanBuilder(c.name, params, batch=batch, tune=tune, cache=cache,
-                         top_k=top_k, reps=reps)
+                         top_k=top_k, reps=reps,
+                         sample_spec=((c.image_size, c.image_size,
+                                       c.in_channels), "float32"))
         for i, m in enumerate(convs):
             out_scale = None
             if fused and i + 1 < n:

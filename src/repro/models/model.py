@@ -593,7 +593,8 @@ class LM:
                              top_k=top_k, reps=reps)
         positions = jnp.broadcast_to(
             jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
-        pb = PlanBuilder(c.name, params, batch=batch)
+        pb = PlanBuilder(c.name, params, batch=batch,
+                         sample_spec=((seq,), "int32"))
         pb.raw("embed", "embed", lambda t: self._embed(params, {"tokens": t}))
         for g in range(c.num_groups):
             gp = jax.tree_util.tree_map(lambda a, _g=g: a[_g],

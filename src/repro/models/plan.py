@@ -86,6 +86,13 @@ class ModelPlan:
     fingerprint: str
     layers: Tuple[LayerPlan, ...]
     batch: Optional[int] = None  # the batch the plan was staged/tuned for
+    # One sample's (shape-sans-batch, dtype-name) the plan was staged for,
+    # e.g. ((32, 32, 3), 'float32') for a CNN or ((128,), 'int32') for LM
+    # prefill. The serving tier validates every request against this at
+    # admission (DESIGN.md §14) so malformed requests are rejected alone
+    # instead of poisoning a co-batch. None for plans built before the
+    # spec was known (validation is then skipped).
+    sample_spec: Optional[Tuple[Tuple[int, ...], str]] = None
 
     def __post_init__(self):
         stages = tuple(l.run for l in self.layers)
@@ -167,6 +174,9 @@ class PlanSet:
     fingerprint: str
     buckets: Tuple[int, ...]
     plans: Mapping[int, "ModelPlan"]
+    # shared per-sample admission spec (see ModelPlan.sample_spec);
+    # build_plan_set inherits it from the bucket plans.
+    sample_spec: Optional[Tuple[Tuple[int, ...], str]] = None
 
     def __post_init__(self):
         if not self.buckets:
@@ -233,14 +243,20 @@ class PlanSet:
     def __call__(self, x):
         return self.serve(x)
 
-    def warmup(self, sample_shape: Tuple[int, ...], dtype=jnp.float32,
-               *, put=None) -> int:
+    def warmup(self, sample_shape: Optional[Tuple[int, ...]] = None,
+               dtype=jnp.float32, *, put=None) -> int:
         """Trace+compile every bucket once (``sample_shape`` is one
-        sample, no batch dim — e.g. ``(H, W, C)``). Warms the same
-        host→device transfer + dispatch signature the host-assembly
-        ``serve`` path uses. Returns :attr:`trace_count` afterwards;
-        serving any batch size through the same ``put`` after this
-        retraces nothing."""
+        sample, no batch dim — e.g. ``(H, W, C)``; defaults to the set's
+        own :attr:`sample_spec`). Warms the same host→device transfer +
+        dispatch signature the host-assembly ``serve`` path uses. Returns
+        :attr:`trace_count` afterwards; serving any batch size through
+        the same ``put`` after this retraces nothing."""
+        if sample_shape is None:
+            if self.sample_spec is None:
+                raise ValueError(
+                    "warmup() needs sample_shape: this plan set carries no "
+                    "sample_spec")
+            sample_shape, dtype = self.sample_spec
         for b in self.buckets:
             xb = np.zeros((b,) + tuple(sample_shape), dtype)
             self.serve(xb, put=put)
@@ -302,9 +318,11 @@ class PlanBuilder:
 
     def __init__(self, model: str, params, *, batch: Optional[int] = None,
                  tune: str = "cache", cache=None, top_k: int = 4,
-                 reps: int = 3):
+                 reps: int = 3,
+                 sample_spec: Optional[Tuple[Tuple[int, ...], str]] = None):
         self.model = model
         self.batch = batch
+        self.sample_spec = sample_spec
         self.fingerprint = params_fingerprint(params)
         self.tune = tune
         self.cache = resolve_tune_cache(tune, cache)
@@ -336,7 +354,7 @@ class PlanBuilder:
         if not self._stages:
             raise ValueError("PlanBuilder has no stages")
         return ModelPlan(self.model, self.fingerprint, tuple(self._stages),
-                         self.batch)
+                         self.batch, self.sample_spec)
 
 
 def build_plan_set(model: str, params, plan_for_batch: Callable[[int], ModelPlan],
@@ -358,4 +376,10 @@ def build_plan_set(model: str, params, plan_for_batch: Callable[[int], ModelPlan
     if bad:
         raise ValueError(f"buckets {bad} not positive multiples of dp={dp}")
     plans = {b: plan_for_batch(b) for b in buckets}
-    return PlanSet(model, params_fingerprint(params), buckets, plans)
+    # every bucket stages the same per-sample signature — inherit the
+    # admission spec (DESIGN.md §14) from the first plan that carries one
+    spec = next(
+        (p.sample_spec for p in plans.values() if p.sample_spec is not None),
+        None,
+    )
+    return PlanSet(model, params_fingerprint(params), buckets, plans, spec)

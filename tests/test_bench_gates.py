@@ -42,6 +42,30 @@ def _fused_artifact(**wall_overrides):
     }
 
 
+def _serve_artifact(**overrides):
+    """Minimal BENCH_serve.json passing schema + check_chaos (§14)."""
+    art = {
+        "plan_us": 10.0, "unplanned_jit_us": 12.0, "bit_identical": True,
+        "patterns": {"poisson": {"completed": 48, "offered": 48,
+                                 "retraces_after_warmup": 0,
+                                 "p99_us": 9000.0, "p99_bound_us": 230000.0}},
+        "chaos": {"innocent_survival": 1.0, "poison_typed": True,
+                  "retraces_after_warmup": 0, "accounting_ok": True,
+                  "goodput_rps": 50.0},
+        "overload": {"goodput_rps": 1400.0, "capacity_rps": 3600.0,
+                     "shed_rate": 0.7, "rejected": 67, "completed": 29,
+                     "offered": 96, "accounting_ok": True,
+                     "p99_us": 6000.0, "p99_bound_us": 100000.0},
+    }
+    for key, val in overrides.items():
+        sect, _, leaf = key.partition("__")
+        if leaf:
+            art[sect][leaf] = val
+        else:
+            art[sect] = val
+    return art
+
+
 class TestSchema:
     def test_valid_artifact_passes(self):
         assert cr.schema_errors("BENCH_fused.json", _fused_artifact()) == []
@@ -69,11 +93,16 @@ class TestSchema:
         assert cr.schema_errors("BENCH_other.json", {}) == []
 
     def test_serve_schema(self):
-        ok = {"plan_us": 10.0, "unplanned_jit_us": 12.0, "bit_identical": True}
+        ok = _serve_artifact()
         assert cr.schema_errors("BENCH_serve.json", ok) == []
-        errs = cr.schema_errors("BENCH_serve.json",
-                                {"plan_us": 10.0, "unplanned_jit_us": 12.0})
+        bad = _serve_artifact()
+        del bad["bit_identical"]
+        errs = cr.schema_errors("BENCH_serve.json", bad)
         assert any("bit_identical" in e for e in errs)
+        bad = _serve_artifact()
+        del bad["chaos"]["poison_typed"]
+        errs = cr.schema_errors("BENCH_serve.json", bad)
+        assert any("poison_typed" in e for e in errs)
 
 
 class TestWallGates:
@@ -129,6 +158,61 @@ class TestWallGates:
 
 
 @pytest.mark.slow
+class TestChaosGate:
+    """check_chaos (DESIGN.md §14): the blast-radius + overload gates on
+    the chaos/overload scenarios recorded in BENCH_serve.json."""
+
+    def _check(self, art, tmp_path, monkeypatch):
+        (tmp_path / "BENCH_serve.json").write_text(json.dumps(art))
+        monkeypatch.setattr(cr, "ROOT", tmp_path)
+        return cr.check_chaos()
+
+    def test_clean_artifact_passes(self, tmp_path, monkeypatch):
+        assert self._check(_serve_artifact(), tmp_path, monkeypatch) == []
+
+    def test_missing_scenarios_trip(self, tmp_path, monkeypatch):
+        art = _serve_artifact()
+        del art["chaos"]
+        errs = self._check(art, tmp_path, monkeypatch)
+        assert any("missing" in e for e in errs)
+
+    def test_innocent_casualty_trips(self, tmp_path, monkeypatch):
+        errs = self._check(_serve_artifact(chaos__innocent_survival=0.857),
+                           tmp_path, monkeypatch)
+        assert any("survival" in e for e in errs)
+
+    def test_untyped_poison_trips(self, tmp_path, monkeypatch):
+        errs = self._check(_serve_artifact(chaos__poison_typed=False),
+                           tmp_path, monkeypatch)
+        assert any("typed" in e for e in errs)
+
+    def test_bisect_retrace_trips(self, tmp_path, monkeypatch):
+        errs = self._check(_serve_artifact(chaos__retraces_after_warmup=2),
+                           tmp_path, monkeypatch)
+        assert any("retraced" in e for e in errs)
+
+    def test_accounting_leak_trips(self, tmp_path, monkeypatch):
+        errs = self._check(_serve_artifact(overload__accounting_ok=False),
+                           tmp_path, monkeypatch)
+        assert any("leaked" in e for e in errs)
+
+    def test_inert_admission_trips(self, tmp_path, monkeypatch):
+        errs = self._check(_serve_artifact(overload__shed_rate=0.0),
+                           tmp_path, monkeypatch)
+        assert any("shed" in e for e in errs)
+
+    def test_overload_p99_over_bound_trips(self, tmp_path, monkeypatch):
+        errs = self._check(_serve_artifact(overload__p99_us=200000.0),
+                           tmp_path, monkeypatch)
+        assert any("p99" in e for e in errs)
+
+    def test_goodput_collapse_trips(self, tmp_path, monkeypatch):
+        # floor = chaos_goodput_floor (0.1) x capacity 3600 = 360 rps
+        errs = self._check(_serve_artifact(overload__goodput_rps=100.0),
+                           tmp_path, monkeypatch)
+        assert any("goodput" in e for e in errs)
+
+
 class TestRunExitCode:
     """benchmarks/run.py must exit nonzero when *any* module fails."""
 

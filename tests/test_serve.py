@@ -16,7 +16,7 @@ import subprocess
 import sys
 import textwrap
 import time
-from concurrent.futures import Future
+from concurrent.futures import CancelledError, Future
 
 import jax
 import jax.numpy as jnp
@@ -176,8 +176,9 @@ def test_plan_set_staleness(ref_served):
 
 
 # --------------------------------------------------- queue aggregation
-def _pending(n=1, arrival=0.0):
-    return _Pending(x=np.zeros((n, 4)), n=n, arrival=arrival, future=Future())
+def _pending(n=1, arrival=0.0, deadline=None):
+    return _Pending(x=np.zeros((n, 4)), n=n, arrival=arrival, future=Future(),
+                    deadline=deadline)
 
 
 def test_microbatcher_flushes_at_max_batch():
@@ -223,6 +224,36 @@ def test_microbatcher_validates():
         MicroBatcher(4, -1.0)
 
 
+def test_microbatcher_request_deadline_tightens_flush():
+    """A pending request deadline pulls the flush time earlier than the
+    max-wait, less the caller's service estimate — so queue wait is
+    charged against the request's budget, not ignored."""
+    mb = MicroBatcher(max_batch=8, max_wait_s=5.0)
+    mb.add(_pending(arrival=10.0))                      # max-wait: 15.0
+    mb.add(_pending(arrival=10.1, deadline=12.0))
+    assert mb.deadline() == pytest.approx(12.0)         # deadline governs
+    assert mb.deadline(service_est_s=0.5) == pytest.approx(11.5)
+    assert not mb.due(11.0, service_est_s=0.5)
+    assert mb.due(11.5, service_est_s=0.5)
+    mb.take()
+    assert mb.deadline() is None
+
+
+def test_microbatcher_expired_deadline_coexists_with_batch_full():
+    """An already-expired pending plus a batch-full flush in one add():
+    the full flush carries the expired request along (ordering
+    preserved), leaving the dispatcher to expire it — the batcher never
+    drops or reorders requests."""
+    mb = MicroBatcher(max_batch=2, max_wait_s=5.0)
+    expired = _pending(arrival=0.0, deadline=1.0)
+    mb.add(expired)
+    assert mb.due(2.0)                                  # past its deadline
+    flushed = mb.add(_pending(arrival=2.0))             # and batch-full now
+    assert len(flushed) == 1 and flushed[0][0] is expired
+    assert [p.deadline for p in flushed[0]] == [1.0, None]
+    assert len(mb) == 0 and not mb.due(99.0)
+
+
 # ------------------------------------------------- threaded server e2e
 def test_server_end_to_end(ref_served):
     """5 single-sample requests, max_batch=4: one full flush + one
@@ -241,6 +272,8 @@ def test_server_end_to_end(ref_served):
     assert s["completed"] == s["offered"] == 5
     assert s["bucket_counts"] == {"1": 1, "4": 1}
     assert s["p50_us"] > 0 and s["p99_us"] >= s["p50_us"]
+    assert s["accounting_ok"] and s["rejected"] == s["failed"] == s["expired"] == 0
+    srv.stats.assert_accounting()
 
 
 def test_server_mixed_request_sizes(ref_served):
@@ -255,6 +288,7 @@ def test_server_mixed_request_sizes(ref_served):
     assert [r.shape[0] for r in results] == [2, 1, 3]
     np.testing.assert_array_equal(np.concatenate(results), ps.serve(pool[:6]))
     assert srv.stats.summary()["padded_frac"] > 0  # 6 samples in an 8-bucket
+    srv.stats.assert_accounting()
 
 
 def test_server_max_wait_bounds_latency(ref_served):
@@ -284,6 +318,50 @@ def test_server_drains_on_stop(ref_served):
         np.concatenate([f.result() for f in futures]),
         ps.serve(np.asarray(x[:3])),
     )
+
+
+def test_server_stop_no_drain_cancels(ref_served):
+    """stop(drain=False): queued-but-undispatched futures are cancelled
+    (CancelledError for waiters, never a hang), and the accounting
+    identity still closes — cancellations count as failed."""
+    _, _, x, ps = ref_served
+    srv = CNNServer(ps, max_batch=8, max_wait_ms=10_000.0)  # never self-flush
+    srv.start()
+    srv.warmup(x.shape[1:])
+    futures = [srv.submit(np.asarray(x[i : i + 1])) for i in range(3)]
+    srv.stop(drain=False)
+    for f in futures:
+        assert f.cancelled()
+        with pytest.raises(CancelledError):
+            f.result(timeout=1)
+    s = srv.stats.summary()
+    assert s["failed"] == 3 and s["completed"] == 0
+    srv.stats.assert_accounting()
+
+
+def test_server_restart_resets_run_state(ref_served):
+    """Pins the restart bug: start() after stop() must not reuse the
+    previous run's stats or warmup-trace snapshot — the accounting
+    identity and the zero-retrace contract are per-run."""
+    _, _, x, ps = ref_served
+    srv = CNNServer(ps, max_batch=4, max_wait_ms=20.0)
+    srv.start()
+    srv.warmup(x.shape[1:])
+    srv.submit(np.asarray(x[:2])).result(timeout=30)
+    srv.stop()
+    first = srv.stats.summary()
+    assert first["completed"] == first["offered"] == 2
+
+    srv.start()                       # second run: fresh books, no re-warmup
+    assert srv.stats.summary()["offered"] == 0
+    assert srv.retraces_after_warmup == 0     # re-baselined, buckets warm
+    out = srv.submit(np.asarray(x[2:3])).result(timeout=30)
+    srv.stop()
+    np.testing.assert_array_equal(out, np.asarray(ps.serve(np.asarray(x[2:3]))))
+    s = srv.stats.summary()
+    assert s["completed"] == s["offered"] == 1  # not 3: stats were reset
+    assert srv.retraces_after_warmup == 0
+    srv.stats.assert_accounting()
 
 
 def test_server_rejects_when_not_running(ref_served):

@@ -30,6 +30,21 @@ generator and writes ``BENCH_serve.json`` (a CI artifact gated by
    within the (now exactly known: the admission cap) depth bound,
    goodput holds above ``chaos_goodput_floor`` x capacity, and the
    ``completed+rejected+failed+expired == offered`` books balance.
+7. **Self-healing lifecycle** (DESIGN.md §15): three chaos scenarios
+   through the ``Supervisor``. (a) a dispatcher kill under Poisson load
+   — the supervised restart requeues every undispatched request and all
+   of them complete bit-identical (survival 1.0, zero hung futures, one
+   ``ServerStats`` balancing the books across the restart); (b) hot
+   reload — a verified checkpoint swaps the plan set atomically
+   mid-traffic, a *corrupted* latest checkpoint fails typed
+   (``CorruptCheckpointError``) with the old plan still serving
+   bit-identical, and ``fallback=True`` walks back to the newest
+   verifiable step; (c) kernel degradation — a persistent compiled-path
+   fault on one bucket demotes exactly that bucket to its bit-compatible
+   ref fallback (innocent buckets untouched, every result still
+   bit-identical), degraded-mode goodput holds above
+   ``selfheal_goodput_floor`` x the healthy path's, and after the fault
+   heals a recovery probe re-promotes the bucket.
 
 Offered load is auto-picked at ~25% of measured capacity (conservative:
 on the CPU smoke model, thread/GIL overhead per dispatch is comparable
@@ -40,6 +55,7 @@ import json
 import pathlib
 import sys
 import time
+from concurrent.futures import TimeoutError as FutureTimeout
 
 # Standalone-runnable (`python -m benchmarks.bench_serve --smoke`, the CI
 # one-liner): put src/ on the path like benchmarks/run.py does.
@@ -53,9 +69,11 @@ import numpy as np
 
 from repro.kernels import core
 from repro.kernels.autotune import interleaved_medians
-from repro.launch.faults import FaultInjected, FaultInjector
+from repro.launch.faults import FaultInjected, FaultInjector, \
+    corrupt_checkpoint
 from repro.launch.server import CNNServer, NumericalFault, Overloaded, \
-    auto_rate, burst_arrivals, poisson_arrivals
+    ServerCrashed, auto_rate, burst_arrivals, poisson_arrivals
+from repro.launch.supervisor import Supervisor
 from repro.xla_utils import median_time_us
 
 OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
@@ -67,6 +85,7 @@ _BASELINES = json.loads(
 PLAN_MARGIN = _BASELINES["serve_plan_margin"]   # plan vs jitted-unplanned
 P99_MARGIN = _BASELINES["serve_p99_margin"]     # p99 vs self-calibrated bound
 GOODPUT_FLOOR = _BASELINES["chaos_goodput_floor"]  # overload goodput/capacity
+SELFHEAL_FLOOR = _BASELINES["selfheal_goodput_floor"]  # degraded vs healthy
 
 
 def _drive(server, arrivals, xpool, sizes):
@@ -187,8 +206,241 @@ def run(report, smoke: bool = True):
                                     max_batch, max_wait_ms, unit_us,
                                     smoke=smoke)
 
+    # --- 7. self-healing lifecycle (§15): restart / reload / degrade ----
+    results["selfheal"] = {
+        "restart": _selfheal_restart(report, plan_set, xpool, sample_shape,
+                                     rate, max_wait_ms),
+        "reload": _selfheal_reload(report, model, qparams, plan_set, xpool,
+                                   sample_shape, max_batch, max_wait_ms),
+        "degraded": _selfheal_degraded(report, model, qparams, plan_set,
+                                       xpool, sample_shape, max_wait_ms),
+    }
+
     OUT_PATH.write_text(json.dumps(results, indent=2))
     report("serve/json", 0.0, f"wrote {OUT_PATH.name}")
+
+
+def _selfheal_restart(report, plan_set, xpool, sample_shape, rate,
+                      max_wait_ms):
+    """§15 scenario (a): a dispatcher kill under Poisson load, recovered
+    by a supervised restart. The kill seam fires mid-run with requests
+    queued; the supervisor must restart the dispatcher, requeue every
+    admitted-but-undispatched request, and *all* of them must complete
+    bit-identical to a fault-free per-request serve — survival 1.0, zero
+    hung futures, zero retraces (the plan set stays compiled across the
+    restart), and one ``ServerStats`` whose
+    ``completed+rejected+failed+expired == offered`` identity spans the
+    whole supervised run."""
+    pool = np.asarray(xpool)
+    n_req = 32
+    arrivals = poisson_arrivals(rate, n_req, seed=17)
+    inj = FaultInjector(kill_after_dispatches=3, kills=1)
+    srv = CNNServer(plan_set, max_wait_ms=max_wait_ms, faults=inj)
+    sup = Supervisor(srv, backoff_s=0.01, backoff_max_s=0.1)
+    ref = {i: np.asarray(plan_set.plans[1].serve(pool[i % pool.shape[0]][None]))
+           for i in range(n_req)}
+    futures, resubmits = [], 0
+    t0 = time.monotonic()
+    with sup:
+        sup.warmup(sample_shape)
+        for i, t_arr in enumerate(arrivals):
+            lag = t_arr - (time.monotonic() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            while True:  # the restart gap: offered again, never dropped
+                try:
+                    futures.append(sup.submit(pool[i % pool.shape[0]][None]))
+                    break
+                except (ServerCrashed, RuntimeError):
+                    resubmits += 1
+                    assert resubmits < 2000, "restart gap never closed"
+                    time.sleep(0.002)
+        timeout_s = sup.request_timeout_s(floor_s=60.0)
+        hung = survived = 0
+        for i, f in enumerate(futures):
+            try:
+                y = np.asarray(f.result(timeout=timeout_s))
+                survived += int(np.array_equal(y, ref[i]))
+            except FutureTimeout:
+                hung += 1
+        elapsed = time.monotonic() - t0
+        health = sup.health()
+    sup.stats.assert_accounting()
+    s = sup.stats.summary()
+    out = {
+        "restarts": s["restarts"],
+        "requeued": s["requeued"],
+        "survival": survived / n_req,      # bit-identical completions
+        "hung": hung,
+        "resubmits": resubmits,
+        "accounting_ok": bool(s["accounting_ok"]),
+        "retraces_after_warmup": sup.retraces_after_warmup,
+        "injector_restarts": inj.restarts,
+        "health": health["status"],
+        "goodput_rps": round(s["completed"] / max(elapsed, 1e-9), 2),
+    }
+    assert out["restarts"] == 1 and inj.restarts == 1, out
+    assert out["requeued"] >= 1, "kill with queued work requeued nothing"
+    assert out["survival"] == 1.0 and hung == 0, out
+    assert out["retraces_after_warmup"] == 0, out
+    report("serve/selfheal_restart", 0.0,
+           f"dispatcher killed mid-load: 1 supervised restart, "
+           f"{s['requeued']} requeued, {n_req}/{n_req} bit-identical, "
+           f"books balanced across the restart")
+    return out
+
+
+def _selfheal_reload(report, model, qparams, plan_set, xpool, sample_shape,
+                     max_batch, max_wait_ms):
+    """§15 scenario (b): hot checkpoint reload mid-traffic. A verified
+    checkpoint swaps the plan set atomically (zero dropped requests,
+    zero retraces after the swap — the supervisor warms off-thread); a
+    *corrupted* latest checkpoint fails typed with the old plan still
+    serving bit-identical; ``fallback=True`` walks back to the newest
+    verifiable step and recovers."""
+    import tempfile
+
+    from repro.checkpoint.store import CorruptCheckpointError, save
+
+    pool = np.asarray(xpool)
+    ckpt_dir = tempfile.mkdtemp(prefix="bench-selfheal-ckpt-")
+    save(ckpt_dir, 1, qparams)
+    save(ckpt_dir, 2, qparams)
+    srv = CNNServer(plan_set, max_wait_ms=max_wait_ms)
+    sup = Supervisor(
+        srv,
+        rebuild=lambda tree: model.plan_set(tree, max_batch=max_batch,
+                                            tune="off"),
+        template=qparams,
+    )
+    out = {"hung": 0}
+    with sup:
+        sup.warmup(sample_shape)
+
+        def probe():  # live traffic around every reload step
+            ys = []
+            for i in range(4):
+                f = sup.submit(pool[i : i + 1])
+                try:
+                    ys.append(np.asarray(f.result(timeout=60)))
+                except FutureTimeout:
+                    out["hung"] += 1
+            return ys
+
+        y0 = probe()
+        step, fp = sup.reload(ckpt_dir)         # clean: swap to step 2
+        out["reload_step"] = step
+        out["swap_bit_identical"] = all(
+            np.array_equal(a, b) for a, b in zip(y0, probe()))
+        corrupt_checkpoint(ckpt_dir, step=2, mode="flip")
+        try:
+            sup.reload(ckpt_dir)
+            out["corrupt_typed"] = False        # must be unreachable
+        except CorruptCheckpointError:
+            out["corrupt_typed"] = True
+        # the failed reload must leave the old plan serving, bit-identical
+        out["old_plan_served"] = all(
+            np.array_equal(a, b) for a, b in zip(y0, probe()))
+        fb_step, _ = sup.reload(ckpt_dir, fallback=True)  # walk back
+        out["fallback_step"] = fb_step
+        out["fallback_recovered"] = bool(
+            fb_step == 1
+            and all(np.array_equal(a, b) for a, b in zip(y0, probe())))
+        out["reloads"] = sup.stats.reloads
+        out["reload_failures"] = sup.reload_failures
+        out["retraces_after_warmup"] = sup.retraces_after_warmup
+        out["health"] = sup.health()["status"]
+    sup.stats.assert_accounting()
+    out["accounting_ok"] = True
+    assert out["reload_step"] == 2 and out["swap_bit_identical"], out
+    assert out["corrupt_typed"] and out["old_plan_served"], out
+    assert out["fallback_recovered"] and out["reloads"] == 2, out
+    assert out["retraces_after_warmup"] == 0 and out["hung"] == 0, out
+    report("serve/selfheal_reload", 0.0,
+           "hot swap to step 2 (bit-identical, 0 retraces), corrupt step "
+           "fails typed with old plan serving, fallback recovers step 1")
+    return out
+
+
+def _selfheal_degraded(report, model, qparams, plan_set, xpool, sample_shape,
+                       max_wait_ms):
+    """§15 scenario (c): persistent compiled-path fault on one bucket.
+    With ``demote_after=1`` the first fault demotes exactly that bucket
+    to its bit-compatible ref fallback — the faulted request itself is
+    rescued (survival stays 1.0), innocent buckets keep their compiled
+    plans bit-identical, degraded-mode goodput holds above
+    ``selfheal_goodput_floor`` x the healthy path's (both measured in
+    this run), and once the fault heals a recovery probe re-promotes."""
+    pool = np.asarray(xpool)
+    fallback = model.fallback_plan_set(qparams, plan_set)  # bit-compat asserted
+    inj = FaultInjector()
+    bad = 4  # the faulty bucket: 3-sample requests pad into it
+    inj.fail_bucket(bad)
+    srv = CNNServer(plan_set, max_wait_ms=max_wait_ms, faults=inj,
+                    fallback=fallback, demote_after=1, probe_every=4)
+    ref1 = [np.asarray(plan_set.plans[1].serve(pool[i : i + 1]))
+            for i in range(8)]
+    ref3 = [np.asarray(plan_set.serve(pool[i : i + 3])) for i in range(8)]
+
+    def drive(n_samples, refs, count):  # serial: one request per dispatch
+        ok = 0
+        t0 = time.monotonic()
+        for i in range(count):
+            f = srv.submit(pool[i : i + n_samples])
+            y = np.asarray(f.result(timeout=60))
+            ok += int(np.array_equal(y, refs[i]))
+        return ok, count * n_samples / max(time.monotonic() - t0, 1e-9)
+
+    out = {}
+    with srv:
+        srv.warmup(sample_shape)
+        # healthy baseline on an innocent bucket (compiled path)
+        ok1, healthy_sps = drive(1, ref1, 8)
+        # the faulty bucket: first dispatch faults -> demoted -> fallback
+        ok3, degraded_sps = drive(3, ref3, 8)
+        health_mid = srv.health()
+        out["demoted"] = {str(b): r for b, r in srv.demoted_buckets().items()}
+        # innocent bucket again while degraded: still compiled, bit-identical
+        ok1b, _ = drive(1, ref1, 8)
+        # heal the backend; the next recovery probe must re-promote
+        inj.heal_bucket(bad)
+        for i in range(8):
+            f = srv.submit(pool[i : i + 3])
+            np.testing.assert_array_equal(np.asarray(f.result(timeout=60)),
+                                          ref3[i])
+            if not srv.demoted_buckets():
+                break
+        health_end = srv.health()
+    srv.stats.assert_accounting()
+    s = srv.stats.summary()
+    out.update({
+        "survival": (ok1 + ok3 + ok1b) / 24,   # bit-identical completions
+        "demoted_exact": list(out["demoted"]) == [str(bad)],
+        "innocents_bit_identical": ok1 + ok1b == 16,
+        "demotions": s["demotions"],
+        "promotions": s["promotions"],
+        "repromoted": not srv.demoted_buckets() and s["promotions"] == 1,
+        "health_degraded": health_mid["status"],
+        "health_recovered": health_end["status"],
+        "bucket_faults_fired": inj.bucket_faults_fired,
+        "healthy_sps": round(healthy_sps, 1),
+        "degraded_sps": round(degraded_sps, 1),
+        "accounting_ok": bool(s["accounting_ok"]),
+    })
+    assert out["survival"] == 1.0, out       # the faulted request is rescued
+    assert out["demoted_exact"] and out["demotions"] == 1, out
+    assert health_mid["status"] == "degraded" and str(bad) in out["demoted"], \
+        health_mid
+    assert out["repromoted"] and health_end["status"] == "ready", out
+    assert degraded_sps >= SELFHEAL_FLOOR * healthy_sps, \
+        f"degraded goodput {degraded_sps:.1f} < {SELFHEAL_FLOOR} x " \
+        f"healthy {healthy_sps:.1f} samples/s"
+    report("serve/selfheal_degraded", 0.0,
+           f"bucket {bad} demoted to ref fallback on first fault "
+           f"(reason recorded), 24/24 bit-identical, degraded "
+           f"{degraded_sps:.0f} vs healthy {healthy_sps:.0f} samples/s, "
+           f"probe re-promoted after heal")
+    return out
 
 
 def _chaos(report, plan_set, xpool, sample_shape, max_batch, max_wait_ms):

@@ -46,7 +46,14 @@ typed poison failures, zero bisect retraces), overload shedding
 bound), the ``completed+rejected+failed+expired == offered`` accounting
 identity, and a goodput floor of ``chaos_goodput_floor`` x measured
 capacity (both sides measured in the same run — noise-aware without a
-separate margin).
+separate margin). The §15 self-healing scenarios in the same artifact
+are gated alongside: the dispatcher-kill run must show ``restarts >= 1``
+with requeued requests, survival exactly 1.0, zero hung futures, and
+the accounting identity intact across the restart; the corrupt-reload
+run must fail typed with the old plan still serving and the step
+walk-back recovering; the kernel-degradation run must demote exactly
+the faulty bucket (innocents bit-identical), re-promote after the heal,
+and hold ``selfheal_goodput_floor`` x the healthy path's goodput.
 
 ``BENCH_lm.json`` gates the §13 LM datapath: compressed projection
 GEMMs must not lose to the dense matmul the pre-PR-8 ``apply_linear``
@@ -117,6 +124,22 @@ SCHEMAS = {
         "overload.accounting_ok": bool,
         "overload.p99_us": "num",
         "overload.p99_bound_us": "num",
+        "selfheal.restart.restarts": "num",
+        "selfheal.restart.survival": "frac",
+        "selfheal.restart.requeued": "num",
+        "selfheal.restart.hung": "frac",
+        "selfheal.restart.accounting_ok": bool,
+        "selfheal.reload.corrupt_typed": bool,
+        "selfheal.reload.old_plan_served": bool,
+        "selfheal.reload.fallback_recovered": bool,
+        "selfheal.reload.reloads": "num",
+        "selfheal.degraded.survival": "frac",
+        "selfheal.degraded.demoted_exact": bool,
+        "selfheal.degraded.innocents_bit_identical": bool,
+        "selfheal.degraded.repromoted": bool,
+        "selfheal.degraded.healthy_sps": "num",
+        "selfheal.degraded.degraded_sps": "num",
+        "selfheal.degraded.accounting_ok": bool,
     },
     "BENCH_lm.json": {
         "gemms[].name": str,
@@ -332,6 +355,69 @@ def check_chaos() -> list:
             f"overload: goodput {over.get('goodput_rps')} rps < "
             f"{_BASE['chaos_goodput_floor']} x capacity "
             f"{over.get('capacity_rps')} rps — shedding collapsed service")
+    errors += _check_selfheal(data)
+    return errors
+
+
+def _check_selfheal(data) -> list:
+    """Gate the §15 self-healing scenarios recorded in BENCH_serve.json:
+    the dispatcher-kill run must actually have gone through supervision
+    (``restarts >= 1`` with requests requeued), every request must have
+    completed bit-identical (survival exactly 1.0, zero hung futures)
+    with the accounting identity spanning the restart; a corrupt
+    checkpoint must have failed typed with the old plan still serving
+    and the step walk-back recovering; and the kernel-degradation run
+    must have demoted exactly the faulty bucket (innocents
+    bit-identical), re-promoted after the heal, and sustained
+    ``selfheal_goodput_floor`` x the healthy path's goodput."""
+    errors = []
+    sh = data.get("selfheal")
+    if not sh:
+        return ["serve: selfheal scenarios missing from BENCH_serve.json "
+                "(stale artifact? rerun benchmarks)"]
+    r = sh.get("restart", {})
+    if not r.get("restarts", 0) >= 1:
+        errors.append("selfheal/restart: restarts == 0 — the kill never "
+                      "exercised supervision")
+    if not r.get("requeued", 0) >= 1:
+        errors.append("selfheal/restart: nothing requeued across the "
+                      "restart (at-most-once handoff inert)")
+    if r.get("survival") != 1.0 or r.get("hung", 1) != 0:
+        errors.append(
+            f"selfheal/restart: survival {r.get('survival')} with "
+            f"{r.get('hung')} hung futures (want 1.0 with 0) — the "
+            "restart dropped or stranded requests")
+    if not r.get("accounting_ok", False):
+        errors.append("selfheal/restart: accounting identity broke across "
+                      "the supervised restart")
+    rl = sh.get("reload", {})
+    if not rl.get("corrupt_typed", False):
+        errors.append("selfheal/reload: corrupt checkpoint did not fail "
+                      "with typed CorruptCheckpointError")
+    if not rl.get("old_plan_served", False):
+        errors.append("selfheal/reload: old plan not serving bit-identical "
+                      "after the failed reload")
+    if not rl.get("fallback_recovered", False):
+        errors.append("selfheal/reload: step walk-back did not recover a "
+                      "verifiable checkpoint")
+    d = sh.get("degraded", {})
+    if d.get("survival") != 1.0:
+        errors.append(f"selfheal/degraded: survival {d.get('survival')} != "
+                      "1.0 — demotion dropped requests")
+    if not d.get("demoted_exact", False) \
+            or not d.get("innocents_bit_identical", False):
+        errors.append("selfheal/degraded: demotion was not isolated to "
+                      "exactly the faulty bucket with innocent buckets "
+                      "bit-identical")
+    if not d.get("repromoted", False):
+        errors.append("selfheal/degraded: recovery probe never re-promoted "
+                      "the healed bucket")
+    floor = _BASE["selfheal_goodput_floor"] * d.get("healthy_sps", 0)
+    if d.get("degraded_sps", 0) < floor:
+        errors.append(
+            f"selfheal/degraded: goodput {d.get('degraded_sps')} < "
+            f"{_BASE['selfheal_goodput_floor']} x healthy "
+            f"{d.get('healthy_sps')} samples/s — fallback collapsed")
     return errors
 
 

@@ -1,4 +1,4 @@
-"""Fault-tolerant checkpointing: atomic, async, elastic.
+"""Fault-tolerant checkpointing: atomic, async, elastic, verified.
 
 - Atomic: write to <dir>/tmp.<step>, fsync, rename to <dir>/step_<n>.
   A crash mid-write never corrupts the latest checkpoint.
@@ -10,9 +10,16 @@
   transparently.
 - Self-describing: a manifest.json records the pytree structure; leaves are
   stored in one .npz. DBBWeight leaves round-trip via their pytree flatten.
+- Verified (DESIGN.md §15): `save` records a sha256 per leaf (over the
+  exact bytes written) plus a digest of the manifest itself; `restore`
+  re-hashes on the way in and raises :class:`CorruptCheckpointError` on
+  any mismatch, truncation, or missing file — silent garbage never
+  reaches a model. ``restore(..., fallback=True)`` walks back to the
+  newest step that still verifies (the self-healing reload path).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import pathlib
@@ -29,9 +36,41 @@ import numpy as np
 _SEP = "/"
 
 
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint failed integrity verification at restore: a leaf or
+    manifest digest mismatched, a file is missing/truncated, or the
+    archive is unreadable. Typed so the serving lifecycle (DESIGN.md §15)
+    can keep the old weights serving and surface the event instead of
+    loading garbage."""
+
+
 def _flatten(tree):
     flat, treedef = jax.tree_util.tree_flatten(tree)
     return flat, treedef
+
+
+def _leaf_paths(tree_like, n: int):
+    """Human-readable tree path per flat leaf index (for error messages);
+    falls back to bare indices when path flattening is unavailable."""
+    try:
+        kflat = jax.tree_util.tree_flatten_with_path(tree_like)[0]
+        paths = [jax.tree_util.keystr(kp) for kp, _ in kflat]
+        if len(paths) == n:
+            return paths
+    except Exception:  # noqa: BLE001 — paths are best-effort decoration
+        pass
+    return [f"[{i}]" for i in range(n)]
+
+
+def _sha256(a: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
+
+
+def _manifest_digest(manifest: dict) -> str:
+    """Digest of the manifest *content* (its own digest field excluded)."""
+    body = {k: v for k, v in manifest.items() if k != "manifest_sha256"}
+    return hashlib.sha256(
+        json.dumps(body, sort_keys=True).encode()).hexdigest()
 
 
 # Dtypes numpy's npz can't store natively survive as same-width unsigned
@@ -69,8 +108,12 @@ def save(ckpt_dir, step: int, tree, *, extra: Optional[dict] = None) -> pathlib.
             "treedef": str(treedef),
             "n_leaves": len(host),
             "dtypes": dtypes,
+            # integrity record (§15): one sha256 per leaf over the exact
+            # bytes written (post-bitcast), verified by restore()
+            "digests": [_sha256(a) for a in host],
             "extra": extra or {},
         }
+        manifest["manifest_sha256"] = _manifest_digest(manifest)
         (tmp / "manifest.json").write_text(json.dumps(manifest))
         # fsync directory contents for crash safety
         for f in tmp.iterdir():
@@ -136,20 +179,94 @@ def latest_step(ckpt_dir) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def restore(ckpt_dir, tree_like, *, step: Optional[int] = None, shardings=None):
-    """Restore into the structure of ``tree_like``.
+def read_verified(ckpt_dir, *, step: Optional[int] = None):
+    """Read and integrity-check one checkpoint; no model tree required.
 
-    shardings: optional matching pytree of jax.sharding.Sharding — arrays are
-    device_put with these (elastic reshard on a new mesh). Without it, plain
-    host arrays are returned.
+    Returns ``(manifest, raw_leaves)`` — the leaves as written (still
+    bitcast for npz-hostile dtypes). Raises :class:`CorruptCheckpointError`
+    on a missing/unreadable file, a manifest whose own digest mismatches,
+    a wrong leaf count, or any leaf whose sha256 differs from the one
+    recorded at save. Checkpoints written before digests existed verify
+    structurally only (no digest record to check against).
     """
     ckpt_dir = pathlib.Path(ckpt_dir)
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     d = ckpt_dir / f"step_{step:08d}"
-    manifest = json.loads((d / "manifest.json").read_text())
-    data = np.load(d / "arrays.npz")
+    try:
+        manifest = json.loads((d / "manifest.json").read_text())
+    except (OSError, ValueError) as e:
+        raise CorruptCheckpointError(
+            f"step {step}: manifest.json unreadable: {e}") from e
+    recorded = manifest.get("manifest_sha256")
+    if recorded is not None and recorded != _manifest_digest(manifest):
+        raise CorruptCheckpointError(
+            f"step {step}: manifest digest mismatch (manifest edited or "
+            "truncated after save)")
+    n = manifest.get("n_leaves")
+    if not isinstance(n, int) or n < 0:
+        raise CorruptCheckpointError(
+            f"step {step}: manifest has no usable n_leaves ({n!r})")
+    try:
+        with np.load(d / "arrays.npz") as data:
+            # materialize every leaf inside the try: npz reads lazily, so
+            # a truncated archive may only fail at member access
+            raw = [np.asarray(data[f"a{i}"]) for i in range(n)]
+    except CorruptCheckpointError:
+        raise
+    except Exception as e:  # noqa: BLE001 — missing/truncated/unreadable
+        raise CorruptCheckpointError(
+            f"step {step}: arrays.npz unreadable ({type(e).__name__}: {e})"
+        ) from e
+    digests = manifest.get("digests")
+    if digests is not None:
+        if len(digests) != len(raw):
+            raise CorruptCheckpointError(
+                f"step {step}: {len(digests)} digests for {len(raw)} leaves")
+        for i, (a, want) in enumerate(zip(raw, digests)):
+            if _sha256(a) != want:
+                raise CorruptCheckpointError(
+                    f"step {step}: leaf {i} sha256 mismatch — checkpoint "
+                    "bytes differ from what save() recorded")
+    return manifest, raw
+
+
+def restore(ckpt_dir, tree_like, *, step: Optional[int] = None, shardings=None,
+            fallback: bool = False):
+    """Restore into the structure of ``tree_like``.
+
+    shardings: optional matching pytree of jax.sharding.Sharding — arrays are
+    device_put with these (elastic reshard on a new mesh). Without it, plain
+    host arrays are returned.
+
+    Every read is integrity-verified (:func:`read_verified`);
+    :class:`CorruptCheckpointError` is raised on any mismatch/truncation.
+    ``fallback=True`` (opt-in) walks back from the requested step to the
+    newest step that still verifies instead of failing — the restored
+    manifest's ``step`` tells the caller which one actually loaded.
+    """
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    if not fallback:
+        manifest, raw = read_verified(ckpt_dir, step=step)
+    else:
+        candidates = [s for s in reversed(list_steps(ckpt_dir)) if s <= step]
+        first_err: Optional[CorruptCheckpointError] = None
+        manifest = raw = None
+        for s in candidates:
+            try:
+                manifest, raw = read_verified(ckpt_dir, step=s)
+                break
+            except CorruptCheckpointError as e:
+                first_err = first_err or e
+        if manifest is None:
+            raise CorruptCheckpointError(
+                f"no verifiable checkpoint under {ckpt_dir} (tried "
+                f"{candidates}); first failure: {first_err}")
+    step = manifest["step"]
     flat_like, treedef = _flatten(tree_like)
     assert manifest["n_leaves"] == len(flat_like), (
         manifest["n_leaves"],
@@ -160,14 +277,17 @@ def restore(ckpt_dir, tree_like, *, step: Optional[int] = None, shardings=None):
 
     flat = []
     for i in range(len(flat_like)):
-        a = data[f"a{i}"]
+        a = raw[i]
         dt = manifest.get("dtypes", [None] * len(flat_like))[i]
         if dt in _BITCAST:
             a = a.view(getattr(ml_dtypes, dt))
         flat.append(a)
+    paths = _leaf_paths(tree_like, len(flat_like))
     for i, (a, ref) in enumerate(zip(flat, flat_like)):
         if hasattr(ref, "shape") and tuple(a.shape) != tuple(ref.shape):
-            raise ValueError(f"leaf {i}: ckpt {a.shape} vs model {ref.shape}")
+            raise ValueError(
+                f"leaf {i} ({paths[i]}) at step {step}: "
+                f"ckpt {a.shape} vs model {ref.shape}")
     if shardings is not None:
         flat_sh = jax.tree_util.tree_leaves(shardings)
         flat = [

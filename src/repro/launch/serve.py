@@ -21,11 +21,16 @@ cache, so repeat launches are search-free).
 instead of a fixed-batch loop: a bucketed plan set (1/2/…/--max-batch),
 the request queue + micro-batcher of ``repro.launch.server``, and a
 Poisson load generator at ``--rate`` requests/s (default: auto-picked
-at ~50% of measured capacity). Reports p50/p99 latency, sustained
-throughput, aggregation shape, and the zero-retrace check:
+at ~50% of measured capacity). The server runs under the §15
+``Supervisor`` (crash → supervised restart with requeue), and
+``--reload-every N`` hot-reloads the weights from a checksummed
+checkpoint every N requests — an atomic plan swap mid-traffic. Reports
+p50/p99 latency, sustained throughput, aggregation shape, supervisor
+state (restarts / requeued / reloads / demoted buckets / health), and
+the zero-retrace check:
 
   PYTHONPATH=src python -m repro.launch.serve --arch sparse-cnn-tiny --smoke \
-      --server --max-batch 8 --max-wait-ms 5 --requests 64
+      --server --max-batch 8 --max-wait-ms 5 --requests 64 --reload-every 24
 
 ``--lm-plan`` serves LM prefill through the same frozen-plan machinery
 (DESIGN.md §13): compress → calibrate → INT8-quantize → ``LM.plan()``,
@@ -139,9 +144,17 @@ def serve_cnn_continuous(args, model, qparams, xpool):
     client-side timeout derived from the server's own deadline/max-wait
     config + measured bucket time (no hardcoded constant). Per-request
     failures (shed, expired, faulted) are tallied into the summary
-    instead of crashing the run on the first bad future."""
-    from repro.launch.server import CNNServer, Overloaded, auto_rate, \
-        poisson_arrivals
+    instead of crashing the run on the first bad future.
+
+    The server runs under the §15 :class:`Supervisor`: a dispatcher
+    crash restarts it (requeuing undispatched requests) instead of
+    failing the run, and ``--reload-every N`` exercises the hot-reload
+    path live — the quantized weights are checkpointed (checksummed) at
+    startup and every N requests the supervisor restores, verifies,
+    rebuilds, and atomically swaps the plan set mid-traffic."""
+    from repro.launch.server import CNNServer, Overloaded, ServerCrashed, \
+        auto_rate, poisson_arrivals
+    from repro.launch.supervisor import Supervisor
 
     sample_shape = xpool.shape[1:]
     plan_set = model.plan_set(qparams, max_batch=args.max_batch, tune=args.tune)
@@ -162,18 +175,41 @@ def serve_cnn_continuous(args, model, qparams, xpool):
     deadline_s = args.deadline_ms / 1e3 if args.deadline_ms else None
     srv = CNNServer(plan_set, max_wait_ms=args.max_wait_ms,
                     max_queue=args.max_queue, shed=args.shed)
+    # reload plans resolve tiles from the autotune cache the first build
+    # populated — a live reload must never block on a tile search
+    retune = "cache" if args.tune == "search" else args.tune
+    sup = Supervisor(
+        srv,
+        rebuild=lambda tree: model.plan_set(
+            tree, max_batch=args.max_batch, tune=retune),
+        template=qparams,
+    )
+    ckpt_dir = None
+    if args.reload_every:
+        import tempfile
+
+        from repro.checkpoint.store import save as ckpt_save
+
+        ckpt_dir = tempfile.mkdtemp(prefix="serve-ckpt-")
+        ckpt_save(ckpt_dir, 1, qparams)
+        print(f"[serve] hot-reload every {args.reload_every} requests from "
+              f"checksummed checkpoint at {ckpt_dir}")
     results, failures = [], {}
-    with srv:
-        srv.warmup(sample_shape)
+    with sup:
+        sup.warmup(sample_shape)
         futures = []
         t0 = time.monotonic()
         for i, t_arr in enumerate(arrivals):
             lag = t_arr - (time.monotonic() - t0)
             if lag > 0:
                 time.sleep(lag)
+            if ckpt_dir is not None and i and i % args.reload_every == 0:
+                step, fp = sup.reload(ckpt_dir)
+                print(f"[serve] hot reload @req {i}: step {step}, plan "
+                      f"{fp[:12]} swapped mid-traffic")
             try:
                 futures.append(
-                    srv.submit(pool[i % pool.shape[0]][None],
+                    sup.submit(pool[i % pool.shape[0]][None],
                                deadline_s=deadline_s))
             except Overloaded as e:  # shed — the run keeps going
                 failures["Overloaded"] = failures.get("Overloaded", 0) + 1
@@ -181,9 +217,12 @@ def serve_cnn_continuous(args, model, qparams, xpool):
                 if failures["Overloaded"] == 1:
                     print(f"[serve] shedding (retry-after "
                           f"{e.retry_after_s * 1e3:.1f}ms)")
+            except ServerCrashed:  # restart gap — tally, keep offering
+                failures["ServerCrashed"] = failures.get("ServerCrashed", 0) + 1
+                futures.append(None)
         # derived from max_wait + backlog x measured bucket time —
         # replaces the old hardcoded f.result(timeout=120)
-        timeout_s = srv.request_timeout_s()
+        timeout_s = sup.request_timeout_s()
         for f in futures:
             if f is None:
                 results.append(None)
@@ -193,8 +232,9 @@ def serve_cnn_continuous(args, model, qparams, xpool):
             except Exception as e:  # noqa: BLE001 — tally, don't crash the run
                 failures[type(e).__name__] = failures.get(type(e).__name__, 0) + 1
                 results.append(None)
-    srv.stats.assert_accounting()
-    s = srv.stats.summary()
+        health = sup.health()
+    sup.stats.assert_accounting()
+    s = sup.stats.summary()
     print(f"[serve] {s['completed']}/{s['offered']} requests in {s['batches']} "
           f"batches {s['bucket_counts']} (padded_frac {s['padded_frac']})")
     if failures:
@@ -202,11 +242,15 @@ def serve_cnn_continuous(args, model, qparams, xpool):
         print(f"[serve] per-request failures: {tally} "
               f"(shed_rate {s['shed_rate']}, expired {s['expired']}, "
               f"failed {s['failed']})")
+    demoted = health.get("demoted", {})
+    print(f"[serve] supervisor: restarts {s['restarts']}  "
+          f"requeued {s['requeued']}  reloads {s['reloads']}  "
+          f"demoted buckets {sorted(demoted) if demoted else 'none'}")
     print(f"[serve] p50 {s['p50_us']:.0f}us  p99 {s['p99_us']:.0f}us  "
           f"goodput {s['throughput_rps']:.1f} rps  "
           f"client timeout {timeout_s:.1f}s (derived)  "
-          f"retraces after warmup: {srv.retraces_after_warmup}  "
-          f"health: {srv.health()['status']}")
+          f"retraces after warmup: {sup.retraces_after_warmup}  "
+          f"health: {health['status']}")
     return results
 
 
@@ -290,6 +334,11 @@ def main(argv=None):
                     help="server: per-request deadline; requests that "
                          "cannot be served in time fail with "
                          "DeadlineExceeded instead of wasting a dispatch")
+    ap.add_argument("--reload-every", type=int, default=None,
+                    help="server: checkpoint the quantized weights at "
+                         "startup and hot-reload them (verify → rebuild → "
+                         "atomic plan swap, DESIGN §15) every N requests "
+                         "mid-traffic")
     args = ap.parse_args(argv)
 
     if args.arch in CNN_ARCHS:

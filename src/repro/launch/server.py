@@ -277,6 +277,15 @@ class ServerStats:
     first_arrival: Optional[float] = None
     last_done: Optional[float] = None
     warmup_traces: int = 0
+    # --- §15 lifecycle counters. The accounting identity spans restarts:
+    # a supervised restart keeps these books open (start(fresh_stats=
+    # False)), so a sample submitted before a crash and requeued across
+    # it is still offered once and lands in exactly one terminal bucket.
+    restarts: int = 0     # supervised dispatcher restarts survived
+    requeued: int = 0     # samples re-enqueued across a restart
+    reloads: int = 0      # hot plan-set swaps (Supervisor.reload)
+    demotions: int = 0    # buckets demoted to the ref fallback path
+    promotions: int = 0   # buckets re-promoted by a recovery probe
 
     @property
     def accounted(self) -> int:
@@ -319,6 +328,11 @@ class ServerStats:
             "bucket_counts": {str(k): v for k, v in sorted(self.bucket_counts.items())},
             "padded_frac": round(self.padded_samples / self.served_samples, 4)
             if self.served_samples else 0.0,
+            "restarts": self.restarts,
+            "requeued": self.requeued,
+            "reloads": self.reloads,
+            "demotions": self.demotions,
+            "promotions": self.promotions,
         }
 
 
@@ -363,11 +377,16 @@ class CNNServer:
                  max_wait_ms: float = 5.0, mesh=None, multi_pod: bool = False,
                  max_queue: Optional[int] = None, shed: str = "reject",
                  validate: bool = True, check_outputs: bool = True,
-                 faults=None):
+                 faults=None, fallback=None, demote_after: int = 2,
+                 probe_every: Optional[int] = 4, on_crash=None):
         if shed not in ("reject", "block"):
             raise ValueError(f"shed must be 'reject' or 'block', got {shed!r}")
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if demote_after < 1:
+            raise ValueError(f"demote_after must be >= 1, got {demote_after}")
+        if probe_every is not None and probe_every < 2:
+            raise ValueError(f"probe_every must be >= 2, got {probe_every}")
         self.plan_set = plan_set
         self.max_batch = int(max_batch or plan_set.buckets[-1])
         self.max_wait_s = float(max_wait_ms) / 1e3
@@ -377,6 +396,23 @@ class CNNServer:
         self._validate = validate
         self._check_outputs = check_outputs
         self._faults = faults
+        # §15 degradation: per-bucket ref-fallback closures (see
+        # models.plan.fallback_closures), demotion threshold in
+        # consecutive compiled-dispatch faults, and the recovery-probe
+        # period (every Nth dispatch on a demoted bucket retries the
+        # compiled path; None disables probing).
+        self._fallback = dict(fallback) if fallback is not None else None
+        self._demote_after = int(demote_after)
+        self._probe_every = probe_every
+        self._strikes: dict = {}     # bucket -> consecutive compiled faults
+        self._demoted: dict = {}     # bucket -> {'reason', 'dispatches'}
+        # §15 supervision: when set, a dispatcher crash hands its
+        # admitted-but-undispatched requests to this callback
+        # (on_crash(exc, pendings)) instead of failing them — the
+        # Supervisor requeues them across the restart. Requests inside a
+        # dispatch at crash time always fail typed (at-most-once).
+        self.on_crash = on_crash
+        self._inflight: dict = {}    # id(p) -> p, dispatcher thread only
         self._put = None
         if mesh is not None:
             from jax.sharding import NamedSharding
@@ -400,7 +436,13 @@ class CNNServer:
         self._ran = False
 
     # ------------------------------------------------------- lifecycle
-    def start(self) -> "CNNServer":
+    def start(self, *, fresh_stats: bool = True) -> "CNNServer":
+        """Start the dispatcher. ``fresh_stats=False`` is the supervised
+        restart path (DESIGN.md §15): the run's books stay open so the
+        accounting identity spans the restart — a sample submitted before
+        the crash and requeued across it is offered once and terminates
+        once. The default resets the run (the §14 operator-restart
+        contract: fresh books, re-baselined traces)."""
         if self._thread is not None:
             raise RuntimeError("server already started")
         if self._ran:
@@ -409,20 +451,28 @@ class CNNServer:
             # corrupt the zero-retrace contract — reset the run and
             # re-baseline traces at the plan set's current count (the
             # buckets stay compiled, so no re-warmup is required).
+            keep: List[_Pending] = []
             while True:  # stale sentinels (e.g. stop() after a crash)
                 try:
                     item = self._q.get_nowait()
                 except _queue.Empty:
                     break
-                if isinstance(item, _Pending):  # can't happen, but never strand
-                    self._cancel(item)
-            self.stats = ServerStats()
-            self.stats.warmup_traces = self.plan_set.trace_count
+                if isinstance(item, _Pending):
+                    # requeued across the restart (§15): the supervisor
+                    # re-enqueues crash-stranded requests *before* the new
+                    # dispatcher thread exists, so an immediate re-crash
+                    # can never lose them mid-handoff.
+                    keep.append(item)
+            for p in keep:
+                self._q.put(p)
+            if fresh_stats:
+                self.stats = ServerStats()
+                self.stats.warmup_traces = self.plan_set.trace_count
             self._batcher = MicroBatcher(self.max_batch, self.max_wait_s)
             with self._lock:
                 self._crashed = None
                 self._degraded = False
-                self._depth = 0
+                self._depth = sum(p.n for p in keep)
         self._ran = True
         self._abandon.clear()
         self._closed = False
@@ -538,24 +588,162 @@ class CNNServer:
     def serve_batch(self, x):
         """Synchronous bucketed serve (no queue): pad → bucket plan →
         slice, through the mesh sharding when set. The dispatcher and
-        direct callers (tests/bench baselines) share this one path."""
-        return self.plan_set.serve(x, put=self._put, on_dispatch=self._record)
+        direct callers (tests/bench baselines) share this one path,
+        including the §15 per-bucket demotion routing."""
+        return self.plan_set.serve(x, put=self._put, on_dispatch=self._record,
+                                   dispatch=self._bucket_dispatch)
+
+    def requeue(self, pendings: List[_Pending]) -> int:
+        """Re-enqueue requests a crash handed back (``on_crash``) after a
+        supervised restart — the §15 at-most-once path for requests that
+        were admitted but never inside a dispatch. They are *not*
+        re-counted as submitted (their offer already happened); the
+        ``requeued`` counter keeps the cross-restart books exact. Returns
+        the number of samples requeued.
+
+        Callable on a running server *or* on a reaped one (after
+        ``stop()``, before the restarting ``start()``) — the supervisor
+        uses the latter so the requests sit in the queue before the new
+        dispatcher thread exists, closing the window where an immediate
+        re-crash could lose them mid-handoff."""
+        total = 0
+        with self._lock:
+            if self._thread is not None and (self._closed
+                                             or self._crashed is not None):
+                raise RuntimeError(
+                    "cannot requeue into a crashed/closing server "
+                    "(reap the dispatcher with stop() first)")
+            for p in pendings:
+                self.stats.requeued += p.n
+                self._depth += p.n
+                total += p.n
+                self._q.put(p)
+        return total
+
+    def fail_pending(self, pendings: List[_Pending], exc: Exception) -> None:
+        """Terminal-fail requests a crash handed back — the Supervisor's
+        path when the circuit breaker keeps the server down. Books stay
+        exact (each sample lands in ``failed``)."""
+        for p in pendings:
+            self._fail(p, exc, kind="failed")
+
+    def cancel_pending(self, pendings: List[_Pending]) -> None:
+        """Cancel requests a crash handed back — the Supervisor's path
+        when ``stop()`` lands during restart backoff. Waiters get
+        ``CancelledError`` (typed, never a hang); books stay exact."""
+        for p in pendings:
+            self._cancel(p)
+
+    def swap_plan_set(self, new_set, *, fallback=None) -> None:
+        """Atomically replace the serving :class:`PlanSet` (the §15 hot
+        reload). The dispatcher reads ``plan_set`` once per batch, so the
+        swap lands *between* bucket dispatches: in-flight batches finish
+        on the old plans (still alive, still compiled), every later batch
+        dispatches the new ones — zero dropped or hung requests. The
+        caller must pass an already-warmed set (``Supervisor.reload``
+        warms off the dispatcher thread); the trace baseline re-anchors
+        at the new set's count so the zero-retrace contract carries over.
+        Demotion state and fallback closures are rebuilt per swap (they
+        are pinned to the old weights)."""
+        if tuple(new_set.buckets) != tuple(self.plan_set.buckets):
+            raise ValueError(
+                f"swap buckets {new_set.buckets} != serving ladder "
+                f"{self.plan_set.buckets}")
+        if (self.plan_set.sample_spec is not None
+                and new_set.sample_spec != self.plan_set.sample_spec):
+            raise ValueError(
+                f"swap sample spec {new_set.sample_spec} != admission "
+                f"contract {self.plan_set.sample_spec}")
+        with self._lock:
+            self.plan_set = new_set
+            self.stats.warmup_traces = new_set.trace_count
+            self.stats.reloads += 1
+            self._fallback = dict(fallback) if fallback is not None else None
+            self._strikes.clear()
+            self._demoted.clear()
+
+    # ------------------------------------------- §15 bucket degradation
+    def _bucket_dispatch(self, b: int, xb):
+        """Per-bucket dispatch with kernel-fallback demotion: a healthy
+        bucket runs its compiled plan; ``demote_after`` consecutive
+        compiled-dispatch faults demote the bucket to its ref fallback
+        closure (requests keep completing — bit-compatible by
+        construction); every ``probe_every``-th dispatch on a demoted
+        bucket retries the compiled path and re-promotes on success."""
+        with self._lock:
+            dem = self._demoted.get(b)
+            probe = False
+            if dem is not None:
+                dem["dispatches"] += 1
+                probe = (self._probe_every is not None
+                         and dem["dispatches"] % self._probe_every == 0)
+        if dem is not None and not probe:
+            return self._fallback[b](xb)
+        try:
+            if self._faults is not None:
+                self._faults.pre_bucket(b)  # compiled-backend fault seam
+            y = self.plan_set.plans[b].serve(xb)
+        except Exception as e:  # noqa: BLE001 — strike, demote, or bubble
+            if dem is not None:  # failed probe: stay demoted, keep serving
+                return self._fallback[b](xb)
+            if self._strike(b, e):
+                return self._fallback[b](xb)  # demoted now: rescue the batch
+            raise  # pre-demotion: bisect isolation handles the batch
+        if dem is not None:
+            self._promote(b)
+        else:
+            with self._lock:
+                self._strikes.pop(b, None)  # a clean dispatch resets strikes
+        return y
+
+    def _strike(self, b: int, exc: Exception) -> bool:
+        """One compiled-dispatch fault against bucket ``b``; demotes at
+        the threshold when a fallback closure exists. True = demoted."""
+        with self._lock:
+            if b in self._demoted:
+                return False
+            k = self._strikes.get(b, 0) + 1
+            self._strikes[b] = k
+            if (self._fallback is not None and b in self._fallback
+                    and k >= self._demote_after):
+                self._demoted[b] = {
+                    "reason": f"{type(exc).__name__}: {exc}",
+                    "dispatches": 0,
+                }
+                self._strikes.pop(b, None)
+                self.stats.demotions += 1
+                return True
+        return False
+
+    def _promote(self, b: int) -> None:
+        with self._lock:
+            if self._demoted.pop(b, None) is not None:
+                self._strikes.pop(b, None)
+                self.stats.promotions += 1
+
+    def demoted_buckets(self) -> dict:
+        """``{bucket: reason}`` for buckets serving on the ref fallback."""
+        with self._lock:
+            return {b: d["reason"] for b, d in sorted(self._demoted.items())}
 
     # ---------------------------------------------------------- health
     def health(self) -> dict:
         """Liveness snapshot: ``status`` is ``'ready'`` (dispatching,
         last dispatch clean, queue below capacity), ``'degraded'``
-        (running, but the last dispatch hit a fault or the queue is at
-        capacity and shedding), or ``'stopped'`` (never started, stopped,
-        or crashed — ``crashed`` distinguishes)."""
+        (running, but the last dispatch hit a fault, the queue is at
+        capacity and shedding, or a bucket is demoted to its ref
+        fallback — ``demoted`` carries ``{bucket: reason}``), or
+        ``'stopped'`` (never started, stopped, or crashed — ``crashed``
+        distinguishes)."""
         with self._lock:
             running = (self._thread is not None and not self._closed
                        and self._crashed is None)
             at_capacity = (self.max_queue is not None
                            and self._depth >= self.max_queue)
+            demoted = {b: d["reason"] for b, d in sorted(self._demoted.items())}
             if not running:
                 status = "stopped"
-            elif self._degraded or at_capacity:
+            elif self._degraded or at_capacity or demoted:
                 status = "degraded"
             else:
                 status = "ready"
@@ -565,6 +753,7 @@ class CNNServer:
                 "queue_depth": self._depth,
                 "max_queue": self.max_queue,
                 "service_estimate_s": self._bucket_time_s,
+                "demoted": demoted,
             }
 
     def service_estimate_s(self) -> Optional[float]:
@@ -680,7 +869,15 @@ class CNNServer:
             else:
                 live.append(p)
         if live:
+            # At-most-once bookkeeping (§15): everything past this line
+            # is "inside a dispatch" — if the dispatcher dies before a
+            # request reaches a terminal outcome, _crash fails it typed
+            # instead of handing it to the supervisor for a requeue (a
+            # re-execution could double side effects / double-serve).
+            for p in live:
+                self._inflight[id(p)] = p
             self._run(live)
+            self._inflight.clear()
 
     def _run(self, batch: List[_Pending]) -> None:
         try:
@@ -736,6 +933,7 @@ class CNNServer:
 
     # ----------------------------------------------- terminal outcomes
     def _complete(self, p: _Pending, y, done: float) -> None:
+        self._inflight.pop(id(p), None)
         with self._lock:
             self.stats.latencies_s.append(done - p.arrival)
             self.stats.completed += p.n
@@ -748,6 +946,7 @@ class CNNServer:
             pass
 
     def _fail(self, p: _Pending, exc: Exception, kind: str) -> None:
+        self._inflight.pop(id(p), None)
         with self._lock:
             setattr(self.stats, kind, getattr(self.stats, kind) + p.n)
             if kind == "failed":
@@ -760,6 +959,7 @@ class CNNServer:
             pass
 
     def _cancel(self, p: _Pending) -> None:
+        self._inflight.pop(id(p), None)
         with self._lock:
             self.stats.failed += p.n  # never served; the identity closes
             self._depth -= p.n
@@ -769,11 +969,23 @@ class CNNServer:
     def _crash(self, exc: BaseException) -> None:
         """Supervision: the dispatcher died — fail every pending future
         with :class:`ServerCrashed` instead of stranding their waiters.
-        ``submit`` raises the same from then on (until a restart)."""
+        ``submit`` raises the same from then on (until a restart).
+
+        §15 split: requests *inside a dispatch* at crash time always fail
+        typed here (at-most-once — a requeue could silently re-execute
+        them), while admitted-but-undispatched requests are handed to the
+        ``on_crash`` callback (the Supervisor requeues them across the
+        restart) when one is installed, and failed typed otherwise."""
         with self._lock:
             self._crashed = exc
             self._closed = True
             self._space.notify_all()
+        err = ServerCrashed(f"dispatcher crashed: {exc!r}")
+        err.__cause__ = exc if isinstance(exc, Exception) else None
+        inflight = list(self._inflight.values())
+        self._inflight.clear()
+        for p in inflight:  # at-most-once: never silently re-executed
+            self._fail(p, err, kind="failed")
         stranded = self._batcher.take()
         while True:  # submit() enqueues under the lock: nothing can trail
             try:
@@ -783,8 +995,23 @@ class CNNServer:
             if isinstance(item, tuple) and item[0] is _STOP:
                 continue
             stranded.append(item)
-        err = ServerCrashed(f"dispatcher crashed: {exc!r}")
-        err.__cause__ = exc if isinstance(exc, Exception) else None
+        cb = self.on_crash
+        if cb is not None and stranded:
+            # the undispatched stay pending: depth still counts them, and
+            # the supervisor either requeues them (stats.requeued) or
+            # fails them itself when the circuit breaker holds the server
+            # down. A callback error must never strand a waiter.
+            try:
+                cb(exc, stranded)
+                return
+            except Exception:  # noqa: BLE001 — fall through to typed fail
+                pass
+        elif cb is not None:
+            try:
+                cb(exc, [])
+                return
+            except Exception:  # noqa: BLE001
+                pass
         for p in stranded:
             self._fail(p, err, kind="failed")
 

@@ -320,6 +320,24 @@ class SparseCNN:
             max_batch=max_batch, buckets=buckets, dp=dp,
         )
 
+    def fallback_plan_set(self, params: dict, primary, *, verify: bool = True):
+        """Per-bucket degradation closures for the §15 self-healing tier:
+        re-stage ``primary``'s bucket ladder on the reference
+        (gather/integer-oracle) kernel path from the *same* quantized
+        params, verify bit-compat per bucket, and return the
+        ``{bucket: serve}`` mapping ``CNNServer(fallback=...)`` consumes.
+        The params fingerprint is content-based, so the ref restage pins
+        to the identical weights — a demoted bucket serves the same
+        numbers through a different backend, not a different model."""
+        import dataclasses as _dc
+
+        from repro.models.plan import fallback_closures
+
+        ref_model = SparseCNN(_dc.replace(self.cfg, kernel_mode="ref"))
+        ref_set = ref_model.plan_set(params, buckets=primary.buckets,
+                                     tune="off")
+        return fallback_closures(primary, ref_set, verify=verify)
+
     # ------------------------------------------- the paper's technique
     def constrain(self, params: dict, step=None, schedule: Optional[PruneSchedule] = None) -> dict:
         out = {}

@@ -198,7 +198,7 @@ class PlanSet:
                 return b
         return None
 
-    def serve(self, x, *, put=None, on_dispatch=None):
+    def serve(self, x, *, put=None, on_dispatch=None, dispatch=None):
         """Bucketed serving of any batch size.
 
         A numpy ``x`` takes the **host-assembly fast path**: chunk/pad/
@@ -213,6 +213,10 @@ class PlanSet:
         serving tier injects ``device_put`` to a mesh's data-axis
         ``NamedSharding`` here. ``on_dispatch(bucket, n_real)`` (optional)
         observes each underlying plan dispatch (stats/bench hook).
+        ``dispatch(bucket, xb)`` (optional) replaces the per-bucket plan
+        dispatch itself — the §15 degradation path routes a demoted
+        bucket to its ref fallback closure here while chunk/pad/slice
+        stay identical.
         """
         n = x.shape[0]
         if n < 1:
@@ -233,7 +237,8 @@ class PlanSet:
                 xb = put(xb)
             if on_dispatch is not None:
                 on_dispatch(b, take)
-            y = self.plans[b].serve(xb)
+            y = (self.plans[b].serve(xb) if dispatch is None
+                 else dispatch(b, xb))
             if host:
                 y = np.asarray(y)  # block + gather once, slice on the host
             outs.append(y if take == b else y[:take])
@@ -282,6 +287,60 @@ class PlanSet:
                 "params (weights were re-quantized/re-compressed/"
                 "re-calibrated) — rebuild with model.plan_set()"
             )
+
+
+# ----------------------------------------------------------------- §15
+def fallback_closures(primary: "PlanSet", fallback: "PlanSet", *,
+                      verify: bool = True, rtol: float = 0.0) -> dict:
+    """Per-bucket degradation closures for the self-healing serving tier
+    (DESIGN.md §15): ``{bucket: serve_callable}`` built from a second
+    :class:`PlanSet` staged on the reference (gather/interpreter) kernel
+    path. When a bucket's compiled (pallas) dispatch persistently fails,
+    the server demotes exactly that bucket to its closure here; every
+    other bucket keeps the compiled path.
+
+    Bit-compat is **asserted at build time** (``verify=True``): the two
+    sets must share the params fingerprint, buckets, and sample spec, and
+    every bucket is served a deterministic batch through both paths —
+    outputs must match exactly (``rtol=0``, the int8 datapath's integer
+    accumulation is bit-identical between ref and pallas) or within
+    ``rtol``. The verification pass doubles as the fallback's warmup, so
+    a later demotion dispatches an already-compiled closure and adds
+    zero mid-traffic traces.
+    """
+    if primary.fingerprint != fallback.fingerprint:
+        raise StalePlanError(
+            "fallback plan set was built from different params than the "
+            "primary — rebuild both from the same quantized weights")
+    if tuple(primary.buckets) != tuple(fallback.buckets):
+        raise ValueError(
+            f"fallback buckets {fallback.buckets} != primary "
+            f"{primary.buckets} — a demoted bucket must keep its ladder")
+    if (primary.sample_spec is not None
+            and fallback.sample_spec != primary.sample_spec):
+        raise ValueError(
+            f"fallback sample spec {fallback.sample_spec} != primary "
+            f"{primary.sample_spec}")
+    if verify:
+        if primary.sample_spec is None:
+            raise ValueError("bit-compat verification needs a sample_spec")
+        shape, dtype = primary.sample_spec
+        rng = np.random.default_rng(0)
+        for b in primary.buckets:
+            xb = rng.standard_normal((b,) + tuple(shape)).astype(dtype)
+            yp = np.asarray(primary.plans[b].serve(xb))
+            yf = np.asarray(fallback.plans[b].serve(xb))
+            if rtol == 0.0:
+                np.testing.assert_array_equal(
+                    yf, yp,
+                    err_msg=f"fallback bucket {b} is not bit-compatible "
+                            "with the compiled path")
+            else:
+                np.testing.assert_allclose(
+                    yf, yp, rtol=rtol,
+                    err_msg=f"fallback bucket {b} diverges beyond "
+                            f"rtol={rtol} from the compiled path")
+    return {b: fallback.plans[b].serve for b in fallback.buckets}
 
 
 # ----------------------------------------------------------------- §13

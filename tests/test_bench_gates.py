@@ -56,6 +56,16 @@ def _serve_artifact(**overrides):
                      "shed_rate": 0.7, "rejected": 67, "completed": 29,
                      "offered": 96, "accounting_ok": True,
                      "p99_us": 6000.0, "p99_bound_us": 100000.0},
+        "selfheal": {
+            "restart": {"restarts": 1, "requeued": 2, "survival": 1.0,
+                        "hung": 0, "accounting_ok": True},
+            "reload": {"corrupt_typed": True, "old_plan_served": True,
+                       "fallback_recovered": True, "reloads": 2},
+            "degraded": {"survival": 1.0, "demoted_exact": True,
+                         "innocents_bit_identical": True, "repromoted": True,
+                         "healthy_sps": 400.0, "degraded_sps": 800.0,
+                         "accounting_ok": True},
+        },
     }
     for key, val in overrides.items():
         sect, _, leaf = key.partition("__")
@@ -211,6 +221,62 @@ class TestChaosGate:
         errs = self._check(_serve_artifact(overload__goodput_rps=100.0),
                            tmp_path, monkeypatch)
         assert any("goodput" in e for e in errs)
+
+    # ----------------------------------------- §15 self-healing gates
+    def test_selfheal_missing_trips(self, tmp_path, monkeypatch):
+        art = _serve_artifact()
+        del art["selfheal"]
+        errs = self._check(art, tmp_path, monkeypatch)
+        assert any("selfheal" in e and "missing" in e for e in errs)
+
+    def test_no_restart_trips(self, tmp_path, monkeypatch):
+        art = _serve_artifact()
+        art["selfheal"]["restart"]["restarts"] = 0
+        errs = self._check(art, tmp_path, monkeypatch)
+        assert any("never exercised supervision" in e for e in errs)
+
+    def test_hung_future_trips(self, tmp_path, monkeypatch):
+        art = _serve_artifact()
+        art["selfheal"]["restart"]["hung"] = 1
+        errs = self._check(art, tmp_path, monkeypatch)
+        assert any("hung" in e for e in errs)
+
+    def test_cross_restart_accounting_trips(self, tmp_path, monkeypatch):
+        art = _serve_artifact()
+        art["selfheal"]["restart"]["accounting_ok"] = False
+        errs = self._check(art, tmp_path, monkeypatch)
+        assert any("across" in e and "restart" in e for e in errs)
+
+    def test_untyped_corrupt_reload_trips(self, tmp_path, monkeypatch):
+        art = _serve_artifact()
+        art["selfheal"]["reload"]["corrupt_typed"] = False
+        errs = self._check(art, tmp_path, monkeypatch)
+        assert any("CorruptCheckpointError" in e for e in errs)
+
+    def test_old_plan_not_serving_trips(self, tmp_path, monkeypatch):
+        art = _serve_artifact()
+        art["selfheal"]["reload"]["old_plan_served"] = False
+        errs = self._check(art, tmp_path, monkeypatch)
+        assert any("old plan" in e for e in errs)
+
+    def test_unisolated_demotion_trips(self, tmp_path, monkeypatch):
+        art = _serve_artifact()
+        art["selfheal"]["degraded"]["demoted_exact"] = False
+        errs = self._check(art, tmp_path, monkeypatch)
+        assert any("exactly the faulty bucket" in e for e in errs)
+
+    def test_degraded_goodput_collapse_trips(self, tmp_path, monkeypatch):
+        # floor = selfheal_goodput_floor (0.1) x healthy 400 = 40 samples/s
+        art = _serve_artifact()
+        art["selfheal"]["degraded"]["degraded_sps"] = 10.0
+        errs = self._check(art, tmp_path, monkeypatch)
+        assert any("fallback collapsed" in e for e in errs)
+
+    def test_never_repromoted_trips(self, tmp_path, monkeypatch):
+        art = _serve_artifact()
+        art["selfheal"]["degraded"]["repromoted"] = False
+        errs = self._check(art, tmp_path, monkeypatch)
+        assert any("re-promoted" in e for e in errs)
 
 
 class TestRunExitCode:

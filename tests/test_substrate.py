@@ -120,6 +120,46 @@ class TestCheckpoint:
         with pytest.raises(AssertionError):
             store.restore(tmp_path, {"a": jnp.zeros(2), "b": jnp.zeros(1)})
 
+    @pytest.mark.parametrize("mode", ["flip", "truncate", "manifest", "missing"])
+    def test_corruption_corpus_fails_typed(self, tmp_path, mode):
+        """§15 integrity: every kind of on-disk damage — a flipped byte,
+        a torn (truncated) write, a manifest edited without re-digesting,
+        a deleted arrays file — surfaces as CorruptCheckpointError at
+        restore, never silent garbage."""
+        from repro.launch.faults import corrupt_checkpoint
+
+        tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                "b": jnp.ones(8, jnp.bfloat16)}
+        store.save(tmp_path, 1, tree)
+        corrupt_checkpoint(tmp_path, mode=mode)
+        with pytest.raises(store.CorruptCheckpointError):
+            store.restore(tmp_path, tree)
+
+    @pytest.mark.parametrize("mode", ["flip", "truncate", "manifest", "missing"])
+    def test_fallback_walks_back_to_verifiable_step(self, tmp_path, mode):
+        """``fallback=True`` recovers the newest step whose checksums
+        still verify when the latest is damaged — and still fails typed
+        when *every* step is damaged."""
+        from repro.launch.faults import corrupt_checkpoint
+
+        tree = {"w": jnp.arange(12, dtype=jnp.float32)}
+        store.save(tmp_path, 1, jax.tree_util.tree_map(lambda a: a + 1, tree))
+        store.save(tmp_path, 2, tree)
+        corrupt_checkpoint(tmp_path, step=2, mode=mode)
+        out, manifest = store.restore(tmp_path, tree, fallback=True)
+        assert manifest["step"] == 1
+        np.testing.assert_array_equal(out["w"], np.arange(12) + 1)
+        corrupt_checkpoint(tmp_path, step=1, mode=mode)
+        with pytest.raises(store.CorruptCheckpointError, match="no verifiable"):
+            store.restore(tmp_path, tree, fallback=True)
+
+    def test_shape_mismatch_reports_path_and_step(self, tmp_path):
+        """A leaf shape mismatch at restore names the tree path and the
+        checkpoint step — not just a bare index."""
+        store.save(tmp_path, 5, {"enc": {"w": jnp.zeros((2, 3))}})
+        with pytest.raises(ValueError, match=r"'w'.*step 5.*\(2, 3\)"):
+            store.restore(tmp_path, {"enc": {"w": jnp.zeros((3, 3))}})
+
     @pytest.mark.slow
     def test_kill_resume_equivalence(self, tmp_path):
         """Train 6 steps straight == train 3, 'crash', resume, train 3."""
